@@ -1,0 +1,68 @@
+"""Accuracy vs K (Avrachenkov: 'one iteration is sufficient').
+
+L1 / Linf / top-k overlap of pi_tilde vs power-iteration reference as the
+number of walks per node K grows; both algorithms and the directed/LOCAL
+variant.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (directed_local_pagerank, improved_pagerank, l1_error,
+                        linf_error, normalized, power_iteration,
+                        simple_pagerank, topk_overlap, walks_per_node_for)
+from repro.graphs import barabasi_albert, directed_web
+
+
+def run(n=256, eps=0.2, Ks=(5, 20, 80, 320)):
+    g = barabasi_albert(n, 3, seed=2)
+    gd = directed_web(n, 6.0, seed=2)
+    pi_ref, _, _ = power_iteration(g, eps)
+    pi_dref, _, _ = power_iteration(gd, eps)
+    rows = []
+    for K in Ks:
+        t0 = time.time()
+        rs = simple_pagerank(g, eps, walks_per_node=K,
+                             key=jax.random.PRNGKey(K))
+        dt_s = time.time() - t0
+        ri = improved_pagerank(g, eps, walks_per_node=K,
+                               key=jax.random.PRNGKey(K + 1))
+        rd = directed_local_pagerank(gd, eps, walks_per_node=K,
+                                     key=jax.random.PRNGKey(K + 2))
+        rows.append(dict(
+            K=K,
+            simple_l1=l1_error(normalized(rs.pi), pi_ref),
+            improved_l1=l1_error(normalized(ri.pi), pi_ref),
+            directed_l1=l1_error(normalized(rd.pi), pi_dref),
+            simple_linf=linf_error(normalized(rs.pi), pi_ref),
+            top10=topk_overlap(rs.pi, np.asarray(pi_ref), 10),
+            us=dt_s * 1e6,
+        ))
+    K_paper = walks_per_node_for(n, eps)
+    r_paper = simple_pagerank(g, eps, walks_per_node=K_paper,
+                              key=jax.random.PRNGKey(0))
+    rows.append(dict(K=K_paper, simple_l1=l1_error(normalized(r_paper.pi),
+                                                   pi_ref),
+                     improved_l1=float("nan"), directed_l1=float("nan"),
+                     simple_linf=linf_error(normalized(r_paper.pi), pi_ref),
+                     top10=topk_overlap(r_paper.pi, np.asarray(pi_ref), 10),
+                     us=0, paper_K=True))
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        tag = "paperK_" if r.get("paper_K") else ""
+        print(f"accuracy_{tag}K{r['K']},{r['us']:.0f},"
+              f"simple_l1={r['simple_l1']:.4f};improved_l1={r['improved_l1']:.4f};"
+              f"directed_l1={r['directed_l1']:.4f};top10={r['top10']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

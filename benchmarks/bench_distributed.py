@@ -1,0 +1,70 @@
+"""Distributed engine scaling: walk-routing vs count-aggregated wire.
+
+Reproduces the §Perf hillclimb measurements: all_to_all payload to full
+termination for both engines at 2/4/8 shards and two walk counts
+(subprocess per shard count — device count is process-global).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_CODE = """
+import json, time, jax
+from repro.core.distributed import distributed_pagerank
+from repro.core.distributed_counts import distributed_pagerank_counts
+from repro.graphs import erdos_renyi
+g = erdos_renyi(200, 6.0, seed=3)
+out = []
+for K in (100, 400):
+    t0 = time.time()
+    rw = distributed_pagerank(g, 0.2, K, jax.random.PRNGKey(0))
+    tw = time.time() - t0
+    t0 = time.time()
+    rc = distributed_pagerank_counts(g, 0.2, K, jax.random.PRNGKey(1))
+    tc = time.time() - t0
+    out.append(dict(K=K, walk_a2a=rw.a2a_bytes_total,
+                    count_a2a=rc.a2a_bytes_total,
+                    walk_us=tw * 1e6, count_us=tc * 1e6,
+                    shards=rw.shards))
+print(json.dumps(out))
+"""
+
+
+def run(shard_counts=(2, 8)):
+    rows = []
+    for p in shard_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+        env["PYTHONPATH"] = SRC
+        res = subprocess.run([sys.executable, "-c", _CODE], env=env,
+                             capture_output=True, text=True, timeout=1200)
+        if res.returncode != 0:
+            rows.append(dict(shards=p, error=res.stderr[-200:]))
+            continue
+        rows.extend(json.loads(res.stdout.strip().splitlines()[-1]))
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        if "error" in r:
+            print(f"dist_shards{r['shards']},0,ERROR={r['error'][:80]}")
+            continue
+        print(f"dist_walk_P{r['shards']}_K{r['K']},{r['walk_us']:.0f},"
+              f"a2a_bytes={r['walk_a2a']}")
+        print(f"dist_count_P{r['shards']}_K{r['K']},{r['count_us']:.0f},"
+              f"a2a_bytes={r['count_a2a']};"
+              f"reduction={r['walk_a2a']/max(r['count_a2a'],1):.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

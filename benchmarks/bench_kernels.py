@@ -1,0 +1,69 @@
+"""Kernel micro-benches: interpret-mode checks + TPU roofline estimates.
+
+Wall-times here are CPU interpret-mode (correctness path); the derived
+column reports the *structural* TPU roofline estimate per kernel:
+bytes touched / HBM bandwidth (all three kernels are memory-bound gathers
+or one-hot reductions at our sizes).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import barabasi_albert
+from repro.kernels.histogram import histogram
+from repro.kernels.segment_spmv import segment_spmv
+from repro.kernels.walk_step import walk_step
+
+HBM_BW = 819e9
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    g = barabasi_albert(1024, 4, seed=5)
+
+    W, n = 65536, 1024
+    ids = jax.random.randint(key, (W,), 0, n)
+    t0 = time.perf_counter()
+    jax.block_until_ready(histogram(ids, n))
+    dt = time.perf_counter() - t0
+    bytes_touched = W * 4 + n * 4
+    rows.append(("histogram_64k", dt * 1e6,
+                 f"tpu_roofline_us={bytes_touched / HBM_BW * 1e6:.2f}"))
+
+    E = g.m
+    val = jax.random.normal(key, (E,))
+    t0 = time.perf_counter()
+    jax.block_until_ready(segment_spmv(val, g.col_idx, g.n))
+    dt = time.perf_counter() - t0
+    bytes_touched = E * 8 + g.n * 4
+    rows.append((f"segment_spmv_E{E}", dt * 1e6,
+                 f"tpu_roofline_us={bytes_touched / HBM_BW * 1e6:.2f}"))
+
+    pos = jax.random.randint(key, (W,), 0, g.n)
+    alive = jnp.ones((W,), bool)
+    ut = jax.random.uniform(key, (W,))
+    ue = jax.random.uniform(key, (W,))
+    t0 = time.perf_counter()
+    jax.block_until_ready(walk_step(pos, alive, ut, ue, g.row_ptr, g.col_idx,
+                                    g.out_deg, eps=0.2))
+    dt = time.perf_counter() - t0
+    bytes_touched = W * (4 * 5) + (g.n * 8 + g.m * 4)
+    rows.append((f"walk_step_64k", dt * 1e6,
+                 f"tpu_roofline_us={bytes_touched / HBM_BW * 1e6:.2f}"))
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

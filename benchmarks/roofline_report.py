@@ -1,0 +1,66 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_seconds(s):
+    return f"{s*1e3:.1f}ms" if s < 10 else f"{s:.1f}s"
+
+
+def table(cells, mesh="pod16x16"):
+    rows = []
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c["status"] == "skipped":
+            rows.append((c["arch"], c["shape"], "SKIP", "", "", "", "", "",
+                         c.get("reason", "")[:40]))
+            continue
+        if c["status"] != "ok":
+            rows.append((c["arch"], c["shape"], "ERR", "", "", "", "", "",
+                         c.get("reason", "")[:40]))
+            continue
+        r = c["roofline"]
+        rows.append((
+            c["arch"], c["shape"],
+            fmt_seconds(r["t_compute"]), fmt_seconds(r["t_memory"]),
+            fmt_seconds(r["t_collective"]), r["bottleneck"],
+            f"{r['useful_flops_fraction']:.2f}",
+            f"{r['mfu']:.3f}",
+            "",
+        ))
+    return rows
+
+
+def main():
+    cells = load_cells()
+    ok = sum(1 for c in cells if c["status"] == "ok")
+    err = sum(1 for c in cells if c["status"] == "error")
+    skip = sum(1 for c in cells if c["status"] == "skipped")
+    print(f"# cells: {len(cells)}  ok={ok} err={err} skipped={skip}")
+    print("name,us_per_call,derived")
+    for c in cells:
+        if c["status"] != "ok":
+            print(f"roofline_{c['cell']},0,status={c['status']}")
+            continue
+        r = c["roofline"]
+        print(f"roofline_{c['cell']},0,"
+              f"bottleneck={r['bottleneck']};step={r['step_time']:.4f}s;"
+              f"mfu={r['mfu']:.4f};useful={r['useful_flops_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

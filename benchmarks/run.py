@@ -1,0 +1,39 @@
+"""Benchmark harness entry: one module per paper claim/table.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV per benchmark:
+  bench_rounds      — Theorem 1 & 2 round complexity scaling
+  bench_accuracy    — Monte-Carlo accuracy vs K (Avrachenkov claim)
+  bench_congestion  — Lemma 1/3 per-edge message bits
+  bench_directed    — Theorem 3 directed/LOCAL variant
+  bench_engines     — engine throughput (counts vs walk-array vs baseline)
+  bench_distributed — multi-shard wire volume: walk-routing vs count lanes
+  bench_kernels     — Pallas kernel micro-benches + TPU roofline estimates
+  roofline_report   — dry-run roofline aggregation (all cells)
+"""
+import importlib
+
+MODULES = [
+    "benchmarks.bench_rounds",
+    "benchmarks.bench_accuracy",
+    "benchmarks.bench_congestion",
+    "benchmarks.bench_directed",
+    "benchmarks.bench_engines",
+    "benchmarks.bench_distributed",
+    "benchmarks.bench_kernels",
+    "benchmarks.roofline_report",
+]
+
+
+def main() -> None:
+    for name in MODULES:
+        print(f"\n=== {name} ===", flush=True)
+        try:
+            importlib.import_module(name).main()
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{name},0,ERROR={type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

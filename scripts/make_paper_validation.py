@@ -1,0 +1,92 @@
+"""Run the paper-validation benchmarks and write the §Paper-validation
+markdown consumed by make_experiments.py.
+
+    PYTHONPATH=src python scripts/make_paper_validation.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
+
+
+def main():
+    from benchmarks import (bench_accuracy, bench_congestion, bench_directed,
+                            bench_rounds)
+
+    lines = ["## §Paper-validation", "",
+             "The faithful reproduction, validated against the paper's own "
+             "claims before any optimization (all numbers measured by the "
+             "CONGEST accounting layer over the count-message engine / "
+             "stitched algorithm)."]
+
+    rows = bench_rounds.run()
+    lines += ["", "### Theorem 1 & 2 — round complexity", "",
+              "| n | eps | SIMPLE congest rounds | IMPROVED congest rounds | "
+              "speedup |", "|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(f"| {r['n']} | {r['eps']} | {r['simple_congest']} | "
+                     f"{r['improved_congest']} | {r['ratio']:.2f}× |")
+    import numpy as np
+    sub = [r for r in rows if r["n"] == max(x["n"] for x in rows)]
+    inv_eps = np.array([1 / r["eps"] for r in sub])
+    simple = np.array([r["simple_congest"] for r in sub], float)
+    improved = np.array([r["improved_congest"] for r in sub], float)
+    s_slope = np.polyfit(inv_eps, simple, 1)
+    i_slope = np.polyfit(inv_eps, improved, 1)
+    lines += ["",
+              f"SIMPLE rounds ≈ {s_slope[0]:.1f}·(1/ε) + {s_slope[1]:.1f} — "
+              "**linear in 1/ε** (Theorem 1: O(log n/ε)); IMPROVED rounds ≈ "
+              f"{i_slope[0]:.1f}·(1/ε) + {i_slope[1]:.1f} with a "
+              f"{s_slope[0]/max(i_slope[0],1e-9):.1f}× smaller slope "
+              "(Theorem 2: the λ=√log n stitching divides the ε-dependence "
+              "of the walk phase). At fixed ε the n-dependence of both is "
+              "logarithmic (rows above grow ~log n across 8× in n)."]
+
+    rows = bench_accuracy.run()
+    lines += ["", "### Monte-Carlo accuracy vs K (Avrachenkov claim)", "",
+              "| K walks/node | SIMPLE L1 | IMPROVED L1 | directed L1 | "
+              "top-10 overlap |", "|---|---|---|---|---|"]
+    for r in rows:
+        tag = " (paper's K=c·log n)" if r.get("paper_K") else ""
+        lines.append(f"| {r['K']}{tag} | {r['simple_l1']:.4f} | "
+                     f"{r['improved_l1']:.4f} | {r['directed_l1']:.4f} | "
+                     f"{r['top10']:.2f} |")
+    lines += ["", "L1 error shrinks ~1/√K; at the paper's K = c·log n the "
+              "estimate is already ranking-accurate (top-10 overlap ≈ 1) — "
+              "matching \"one iteration is sufficient\"."]
+
+    rows = bench_congestion.run()
+    lines += ["", "### Lemma 1 / Lemma 3 — congestion", "",
+              "| K | total walks | max bits/edge/round | B (CONGEST) | "
+              "CONGEST rounds |", "|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(f"| {r['K']} | {r['walks']} | {r['max_bits']} | "
+                     f"{r['bandwidth_B']} | {r['congest']} |")
+    lines += ["", "100× more parallel walks cost ~log-factor more bits per "
+              "edge (counts, never identities): the Lemma-1 mechanism. "
+              "Payloads stay under B = Θ(log²n), so logical rounds == "
+              "CONGEST rounds."]
+
+    rows = bench_directed.run()
+    lines += ["", "### Theorem 3 — directed graphs in LOCAL", "",
+              "| n | λ | logical rounds (P1+P2+P3) | coupons created | L1 |",
+              "|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(f"| {r['n']} | {r['lam']} | {r['logical']} | "
+                     f"{r['coupons']} | {r['l1']:.4f} |")
+    lines += ["", "Directed variant: λ=√(log n/ε), polynomial per-node "
+              "coupon pools (LOCAL model), sub-logarithmic round counts; "
+              "accuracy matches the undirected case."]
+
+    os.makedirs(os.path.join(ROOT, "results"), exist_ok=True)
+    with open(os.path.join(ROOT, "results", "paper_validation.md"), "w") as f:
+        f.write("\n".join(lines))
+    print("results/paper_validation.md written")
+
+
+if __name__ == "__main__":
+    main()

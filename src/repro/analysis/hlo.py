@@ -1,0 +1,68 @@
+"""HLO text parsing: collective byte extraction for the roofline model.
+
+cost_analysis() reports FLOPs and memory traffic but not collective
+volume, so we parse the optimized HLO for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops and sum their operand
+sizes. Shapes are parsed from the op's result/operand type strings.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  f32[16,128]{1,0}  or bf16[4096]  or (f32[2], s32[3]) tuples
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+
+# "  %name = TYPE op-name(...)" — capture result type text + op
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+
+def _shape_bytes(type_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of result-shape bytes per collective kind (proxy for payload).
+
+    `-done` ops are skipped so async pairs are not double counted.
+    """
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        type_text, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(type_text)
+    return dict(out)
+
+
+def count_ops(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if m and "-done(" not in line:
+            counts[m.group(2)] += 1
+    return dict(counts)

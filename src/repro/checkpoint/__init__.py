@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpointer import Checkpointer, restore_into
+from repro.checkpoint.elastic import relayout_pagerank_state
+
+__all__ = ["Checkpointer", "restore_into", "relayout_pagerank_state"]

@@ -1,0 +1,54 @@
+"""Elastic re-layout: resume a checkpoint on a different mesh size.
+
+Training state: checkpoints hold full (host-gathered) arrays, so re-layout
+is a `device_put` with the new mesh's NamedSharding — handled by
+`checkpointer.restore_into`.
+
+PageRank engine state is mesh-shaped ([P, cap] walk buffers, [P, n_loc]
+visit shards), so resizing P requires real repartitioning — implemented
+here: walks are re-bucketed by their new owner shard, visit counters are
+re-split along the vertex axis. Exactness: the multiset of live walks and
+the per-vertex zeta are preserved bit-for-bit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import numpy as np
+
+
+def relayout_pagerank_state(host_state: Dict, n: int, new_shards: int,
+                            cap: int | None = None) -> Dict:
+    pos = np.asarray(host_state["pos"])        # [P_old, cap_old]
+    zeta = np.asarray(host_state["zeta"])      # [P_old, n_loc_old]
+    old_shards, old_cap = pos.shape
+    live = pos[pos >= 0]
+
+    n_loc = math.ceil(n / new_shards)
+    n_pad = n_loc * new_shards
+    if cap is None:
+        cap = max(old_cap * old_shards // new_shards + new_shards * 64, 256)
+
+    new_pos = np.full((new_shards, cap), -1, dtype=np.int32)
+    for p in range(new_shards):
+        mine = live[(live // n_loc) == p]
+        if len(mine) > cap:
+            raise ValueError(f"elastic relayout overflow on shard {p}: "
+                             f"{len(mine)} walks > cap {cap}")
+        new_pos[p, : len(mine)] = mine
+
+    zeta_flat = zeta.reshape(-1)[:n]
+    zeta_pad = np.concatenate([zeta_flat,
+                               np.zeros(n_pad - n, dtype=zeta_flat.dtype)])
+    new_zeta = zeta_pad.reshape(new_shards, n_loc)
+
+    # fresh independent per-shard keys derived from the old ones
+    old_keys = np.asarray(host_state["key"]).reshape(-1)
+    seed = int(np.bitwise_xor.reduce(old_keys.astype(np.uint32))) & 0x7FFFFFFF
+    import jax
+    new_keys = np.asarray(jax.random.split(jax.random.PRNGKey(seed), new_shards))
+
+    return dict(pos=new_pos, zeta=new_zeta, key=new_keys,
+                round=host_state["round"], dropped=host_state["dropped"],
+                waited=host_state["waited"])

@@ -1,0 +1,83 @@
+"""Assigned input shapes x input_specs (ShapeDtypeStruct stand-ins).
+
+Four shapes per LM architecture (40 cells):
+    train_4k     seq 4096,    global_batch 256   (train_step)
+    prefill_32k  seq 32768,   global_batch 32    (serve prefill)
+    decode_32k   cache 32768, global_batch 128   (serve decode, 1 new token)
+    long_500k    cache 524288, global_batch 1    (decode; sub-quadratic only)
+
+`long_500k` requires bounded decode state: it runs for ssm / hybrid /
+sliding-window archs and is skipped (recorded) for pure full-attention
+archs — see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k":
+        return cfg.is_subquadratic
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   batch dict for loss_fn (tokens/labels + modality extras)
+    prefill: prompt tokens (+ modality extras)
+    decode:  one new token; the KV cache comes from the model's
+             init_cache eval_shape (see launch/dryrun.py).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = dict(tokens=_sds((B, S), jnp.int32),
+                     labels=_sds((B, S), jnp.int32))
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                   jnp.bfloat16)
+        if cfg.family == "vlm":
+            # image prefix + text = S total positions
+            batch["tokens"] = _sds((B, S - cfg.num_image_tokens), jnp.int32)
+            batch["labels"] = _sds((B, S - cfg.num_image_tokens), jnp.int32)
+            batch["img_embeds"] = _sds((B, cfg.num_image_tokens, cfg.d_model),
+                                       jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        spec = dict(tokens=_sds((B, S), jnp.int32))
+        if cfg.family == "audio":
+            spec["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                  jnp.bfloat16)
+        if cfg.family == "vlm":
+            spec["tokens"] = _sds((B, S - cfg.num_image_tokens), jnp.int32)
+            spec["img_embeds"] = _sds((B, cfg.num_image_tokens, cfg.d_model),
+                                      jnp.bfloat16)
+        return spec
+    # decode: one token; cache built separately via init_cache eval_shape
+    return dict(token=_sds((B, 1), jnp.int32))

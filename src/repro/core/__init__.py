@@ -1,0 +1,29 @@
+"""The paper's primary contribution: fast distributed PageRank computation.
+
+Public API:
+  CSRGraph, from_edges                    — graph substrate
+  simple_pagerank (Algorithm 1)           — O(log n / eps) CONGEST rounds
+  improved_pagerank (Algorithm 2)         — O(sqrt(log n) / eps) CONGEST rounds
+  directed_local_pagerank (Section 5)     — O(sqrt(log n / eps)) LOCAL rounds
+  power_iteration                         — classical baseline
+  distributed_pagerank                    — shard_map multi-device engine
+"""
+from repro.core.graph import CSRGraph, from_edges, exact_pagerank
+from repro.core.power_iteration import power_iteration
+from repro.core.simple_pagerank import (PageRankResult, simple_pagerank,
+                                        walks_per_node_for)
+from repro.core.improved_pagerank import (ImprovedResult, improved_pagerank,
+                                          directed_local_pagerank)
+from repro.core.personalized import exact_ppr, personalized_pagerank
+from repro.core.estimator import (l1_error, linf_error, max_rel_error,
+                                  normalized, pagerank_from_visits,
+                                  topk_overlap)
+
+__all__ = [
+    "CSRGraph", "from_edges", "exact_pagerank", "power_iteration",
+    "PageRankResult", "simple_pagerank", "walks_per_node_for",
+    "ImprovedResult", "improved_pagerank", "directed_local_pagerank",
+    "l1_error", "linf_error", "max_rel_error", "normalized",
+    "pagerank_from_visits", "topk_overlap",
+    "personalized_pagerank", "exact_ppr",
+]

@@ -1,0 +1,324 @@
+"""Multi-device distributed PageRank engine (shard_map).
+
+This is the TPU-pod realization of the paper's CONGEST network: vertices are
+partitioned into contiguous shards, one per mesh device; a logical round is a
+bulk-synchronous super-step:
+
+    route  — walks whose current vertex is owned by another shard are
+             exchanged with a fixed-capacity `all_to_all` (the payload is the
+             paper's Lemma-1 insight: anonymous walk positions/counts, never
+             identities);
+    step   — each shard advances its owned walks one PageRank step
+             (terminate w.p. eps, else uniform out-edge).
+
+Static shapes throughout: per-shard walk buffers of capacity `cap`, per
+(shard,shard) routing lanes of capacity `route_cap`. Walks that do not fit a
+routing lane in a round *wait* (correctness preserved — a waiting walk is
+simply delayed) and are carried over; a `work_cap` bound on steps per shard
+per round provides straggler mitigation (uniform round time). Buffer
+overflow beyond `cap` is counted in `dropped` and must be 0 for an exact
+run — the sizing rule `cap >= 2*W/P + P*route_cap` keeps it 0 in practice.
+
+Visit counting: a walk's arrival is counted by the *owner* shard exactly
+once — immediately for intra-shard moves, at receive time for routed walks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.graph import CSRGraph
+
+try:  # jax >= 0.6 stable API
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        # check_vma=False: jax.random.binomial's internal while_loop mixes
+        # varying/invariant carries under the VMA checker; collectives in
+        # our supersteps are explicit (psum/all_to_all), so the check adds
+        # nothing.
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
+
+AXIS = "shards"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedGraph:
+    """Vertex-partitioned CSR: shard p owns [p*n_loc, (p+1)*n_loc)."""
+
+    n: int
+    n_pad: int
+    n_loc: int
+    shards: int
+    row_ptr: jnp.ndarray   # [P, n_loc+1] rebased per shard
+    col_idx: jnp.ndarray   # [P, m_loc_pad] global vertex ids
+    out_deg: jnp.ndarray   # [P, n_loc]
+
+
+def shard_graph(graph: CSRGraph, shards: int) -> ShardedGraph:
+    n_loc = math.ceil(graph.n / shards)
+    n_pad = n_loc * shards
+    row_ptr = np.asarray(graph.row_ptr)
+    col = np.asarray(graph.col_idx)
+    deg = np.concatenate([np.asarray(graph.out_deg),
+                          np.zeros(n_pad - graph.n, dtype=np.int32)])
+    m_loc = []
+    for p in range(shards):
+        lo = min(p * n_loc, graph.n)
+        hi = min((p + 1) * n_loc, graph.n)
+        m_loc.append(int(row_ptr[hi] - row_ptr[lo]))
+    m_pad = max(max(m_loc), 1)
+    rp = np.zeros((shards, n_loc + 1), dtype=np.int32)
+    ci = np.zeros((shards, m_pad), dtype=np.int32)
+    dg = np.zeros((shards, n_loc), dtype=np.int32)
+    for p in range(shards):
+        lo = min(p * n_loc, graph.n)
+        hi = min((p + 1) * n_loc, graph.n)
+        local_rp = row_ptr[lo:hi + 1] - row_ptr[lo]
+        rp[p, : hi - lo + 1] = local_rp
+        rp[p, hi - lo + 1:] = local_rp[-1]
+        ci[p, : m_loc[p]] = col[row_ptr[lo]:row_ptr[hi]]
+        dg[p, : hi - lo] = deg[lo:hi]
+    return ShardedGraph(n=graph.n, n_pad=n_pad, n_loc=n_loc, shards=shards,
+                        row_ptr=jnp.asarray(rp), col_idx=jnp.asarray(ci),
+                        out_deg=jnp.asarray(dg))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DistState:
+    pos: jnp.ndarray     # [P, cap] global vertex id, -1 = empty slot
+    zeta: jnp.ndarray    # [P, n_loc]
+    key: jnp.ndarray     # [P, 2] per-shard PRNG keys (uint32)
+    round: jnp.ndarray   # [] int32
+    dropped: jnp.ndarray  # [] int32 — must stay 0 for an exact run
+    waited: jnp.ndarray   # [] int32 — routing-lane carry-overs (stat)
+
+
+def _rank_within(sort_key: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """For each element, its rank within its equal-key group (stable)."""
+    W = sort_key.shape[0]
+    order = jnp.argsort(sort_key)
+    sorted_k = sort_key[order]
+    idx = jnp.arange(W)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sorted_k[1:] != sorted_k[:-1]])
+    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    rank_sorted = idx - run_start
+    rank = jnp.zeros((W,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    return rank, order
+
+
+def _superstep_local(rp, ci, dg, pos, key, zeta, eps: float, n_loc: int,
+                     shards: int, route_cap: int, work_cap: int):
+    """One super-step on a single shard (runs under shard_map).
+
+    Inputs arrive with a leading size-1 shard dim (shard_map blocks);
+    squeeze on entry, re-expand on exit.
+    """
+    rp, ci, dg, pos, key, zeta = (rp[0], ci[0], dg[0], pos[0], key[0], zeta[0])
+    cap = pos.shape[0]
+    shard_id = jax.lax.axis_index(AXIS)
+
+    # ---- route: send non-owned walks, up to route_cap per target ----
+    valid = pos >= 0
+    owner = jnp.where(valid, pos // n_loc, shards)
+    needs = valid & (owner != shard_id)
+    sort_key = jnp.where(needs, owner, shards)  # local/empty sort last
+    rank, _ = _rank_within(sort_key)
+    sendable = needs & (rank < route_cap)
+    # unique (owner, rank) per sendable walk; everyone else dumps into the
+    # sentinel slot past the end (mode="drop" discards it)
+    flat_idx = jnp.where(sendable, owner * route_cap + rank,
+                         shards * route_cap)
+    send = (jnp.full((shards * route_cap,), -1, dtype=jnp.int32)
+            .at[flat_idx].set(jnp.where(sendable, pos, -1), mode="drop")
+            .reshape(shards, route_cap))
+    waited = jnp.sum(needs & ~sendable)
+    kept = jnp.where(sendable, -1, pos)  # sent slots freed
+
+    recv = jax.lax.all_to_all(send, AXIS, split_axis=0, concat_axis=0,
+                              tiled=True)  # [shards*route_cap]
+    recv = recv.reshape(-1)
+    arrived = recv >= 0
+    # count arrivals (they are owned by me by construction)
+    zeta = zeta + jax.ops.segment_sum(
+        arrived.astype(jnp.int32),
+        jnp.where(arrived, recv - shard_id * n_loc, n_loc),
+        num_segments=n_loc + 1)[:n_loc]
+
+    # ---- merge buffer: kept walks + arrivals, compact into cap slots ----
+    merged = jnp.concatenate([kept, jnp.where(arrived, recv, -1)])
+    order = jnp.argsort(jnp.where(merged >= 0, 0, 1), stable=True)
+    merged = merged[order]
+    total_valid = jnp.sum(merged >= 0)
+    dropped = jnp.maximum(total_valid - cap, 0)
+    pos = merged[:cap]
+
+    # ---- step: advance owned walks (straggler-bounded) ----
+    key, k_term, k_edge = jax.random.split(key, 3)
+    valid = pos >= 0
+    owner = jnp.where(valid, pos // n_loc, shards)
+    owned = valid & (owner == shard_id)
+    owned_rank, _ = _rank_within(jnp.where(owned, 0, 1).astype(jnp.int32))
+    stepped = owned & (owned_rank < work_cap) if work_cap else owned
+    local = jnp.where(stepped, pos - shard_id * n_loc, 0)
+    deg = dg[local]
+    u_term = jax.random.uniform(k_term, (cap,))
+    survive = stepped & (u_term >= eps) & (deg > 0)
+    u_edge = jax.random.uniform(k_edge, (cap,))
+    j = jnp.minimum((u_edge * jnp.maximum(deg, 1)).astype(jnp.int32),
+                    jnp.maximum(deg - 1, 0))
+    eid = jnp.clip(rp[local] + j, 0, ci.shape[0] - 1)
+    dst = ci[eid]
+    new_pos = jnp.where(survive, dst, jnp.where(stepped, -1, pos))
+    # intra-shard arrivals counted immediately
+    dst_owner = dst // n_loc
+    local_arrival = survive & (dst_owner == shard_id)
+    zeta = zeta + jax.ops.segment_sum(
+        local_arrival.astype(jnp.int32),
+        jnp.where(local_arrival, dst - shard_id * n_loc, n_loc),
+        num_segments=n_loc + 1)[:n_loc]
+
+    # global (replicated) scalar stats
+    active = jax.lax.psum(jnp.sum(new_pos >= 0), AXIS)
+    dropped = jax.lax.psum(dropped, AXIS)
+    waited = jax.lax.psum(waited, AXIS)
+    a2a_bytes = jax.lax.psum(jnp.sum(send >= 0) * 4, AXIS)
+    return (new_pos[None], key[None], zeta[None],
+            active, dropped, waited, a2a_bytes)
+
+
+def _make_superstep(mesh: Mesh, eps: float, n_loc: int, shards: int,
+                    route_cap: int, work_cap: int):
+    fn = partial(_superstep_local, eps=eps, n_loc=n_loc, shards=shards,
+                 route_cap=route_cap, work_cap=work_cap)
+    sharded = shard_map(
+        fn, mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(), P()),
+    )
+
+    @jax.jit
+    def step(sg_row_ptr, sg_col, sg_deg, state: DistState):
+        new_pos, key, zeta, active, dropped, waited, a2a = sharded(
+            sg_row_ptr, sg_col, sg_deg, state.pos, state.key, state.zeta)
+        return DistState(pos=new_pos, zeta=zeta, key=key,
+                         round=state.round + 1,
+                         dropped=state.dropped + dropped,
+                         waited=state.waited + waited), active, a2a
+
+    return step
+
+
+@dataclasses.dataclass
+class DistributedResult:
+    zeta: jnp.ndarray          # [n] global visit counts
+    pi: jnp.ndarray
+    rounds: int
+    dropped: int
+    waited: int
+    a2a_bytes_total: int
+    shards: int
+
+
+def distributed_pagerank(
+    graph: CSRGraph,
+    eps: float,
+    walks_per_node: int,
+    key: jnp.ndarray,
+    *,
+    mesh: Optional[Mesh] = None,
+    cap: Optional[int] = None,
+    route_cap: Optional[int] = None,
+    work_cap: int = 0,
+    max_rounds: int = 100_000,
+) -> DistributedResult:
+    """Run Algorithm 1 across all devices of `mesh` (default: all devices)."""
+    if mesh is None:
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs, (AXIS,))
+    shards = mesh.devices.size
+    sg = shard_graph(graph, shards)
+    W = graph.n * walks_per_node
+    if cap is None:
+        cap = max(2 * W // shards + shards * 64, 256)
+    if route_cap is None:
+        route_cap = max(W // shards, 64)
+
+    # init: walks start at their own vertex; zeta starts at K per real vertex
+    pos0 = np.full((shards, cap), -1, dtype=np.int32)
+    zeta0 = np.zeros((shards, sg.n_loc), dtype=np.int32)
+    for p in range(shards):
+        lo = min(p * sg.n_loc, graph.n)
+        hi = min((p + 1) * sg.n_loc, graph.n)
+        locs = np.repeat(np.arange(lo, hi, dtype=np.int32), walks_per_node)
+        assert len(locs) <= cap, "cap too small for initial placement"
+        pos0[p, : len(locs)] = locs
+        zeta0[p, : hi - lo] = walks_per_node
+
+    keys = jax.random.split(key, shards)
+    spec = NamedSharding(mesh, P(AXIS))
+    state = DistState(
+        pos=jax.device_put(jnp.asarray(pos0), spec),
+        zeta=jax.device_put(jnp.asarray(zeta0), spec),
+        key=jax.device_put(keys, spec),
+        round=jnp.int32(0),
+        dropped=jnp.int32(0),
+        waited=jnp.int32(0),
+    )
+    sg_rp = jax.device_put(sg.row_ptr, spec)
+    sg_ci = jax.device_put(sg.col_idx, spec)
+    sg_dg = jax.device_put(sg.out_deg, spec)
+
+    step = _make_superstep(mesh, float(eps), sg.n_loc, shards,
+                           int(route_cap), int(work_cap))
+    a2a_total = 0
+    rounds = 0
+    while rounds < max_rounds:
+        state, active, a2a = step(sg_rp, sg_ci, sg_dg, state)
+        a2a_total += int(a2a)
+        rounds += 1
+        if int(active) == 0:
+            break
+    zeta = state.zeta.reshape(-1)[: graph.n]
+    pi = zeta.astype(jnp.float32) * (eps / (graph.n * walks_per_node))
+    return DistributedResult(
+        zeta=zeta, pi=pi, rounds=rounds, dropped=int(state.dropped),
+        waited=int(state.waited), a2a_bytes_total=a2a_total, shards=shards)
+
+
+# --------------------------------------------------------------------------
+# checkpoint/restart hooks (used by runtime.fault_tolerance)
+# --------------------------------------------------------------------------
+
+def state_to_host(state: DistState) -> dict:
+    return dict(pos=np.asarray(state.pos), zeta=np.asarray(state.zeta),
+                key=np.asarray(state.key), round=int(state.round),
+                dropped=int(state.dropped), waited=int(state.waited))
+
+
+def state_from_host(d: dict, mesh: Mesh) -> DistState:
+    spec = NamedSharding(mesh, P(AXIS))
+    return DistState(
+        pos=jax.device_put(jnp.asarray(d["pos"]), spec),
+        zeta=jax.device_put(jnp.asarray(d["zeta"]), spec),
+        key=jax.device_put(jnp.asarray(d["key"]), spec),
+        round=jnp.int32(d["round"]),
+        dropped=jnp.int32(d["dropped"]),
+        waited=jnp.int32(d["waited"]),
+    )

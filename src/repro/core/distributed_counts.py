@@ -1,0 +1,282 @@
+"""Count-aggregated distributed engine — Lemma 1 applied to our own wire.
+
+The walk-array engine (distributed.py) routes every cross-shard walk as its
+own int32 position: payload ∝ moving walks. The paper's core insight
+(Lemma 1) says walks are anonymous — only *counts* per edge matter. This
+engine keeps per-vertex coupon counts as shard state and exchanges
+(dst_vertex, count) pairs, so the all_to_all payload is bounded by the
+number of CUT EDGES with traffic this round — **independent of how many
+walks run in parallel**.
+
+Payload bound is static: lane capacity per (src,dst) shard pair =
+|edges crossing that pair| (precomputed from the partition), so there is no
+overflow path at all (the walk engine needs waiting/carry-over logic).
+
+Per super-step, per shard:
+  1. terminations  ~ Binomial(counts, eps)                (paper line 4-5)
+  2. survivors split over out-edges via the conditional-binomial chain
+     (exact Multinomial — same sampler as engine_counts)
+  3. per-edge counts aggregated per destination *vertex* and exchanged with
+     one all_to_all of (vertex, count) lanes               (Lemma 1 wire)
+  4. arrivals summed into counts + visit counters zeta
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import AXIS, shard_map
+from repro.core.graph import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPaddedGraph:
+    """Per-shard padded adjacency with static cross-shard lane bounds."""
+
+    n: int
+    n_pad: int
+    n_loc: int
+    shards: int
+    max_deg: int
+    nbr: jnp.ndarray        # [P, n_loc, max_deg] global dst (self-padded)
+    valid: jnp.ndarray      # [P, n_loc, max_deg]
+    deg: jnp.ndarray        # [P, n_loc]
+    lane_cap: int           # max edges crossing any (src,dst) shard pair
+
+
+def shard_graph_padded(graph: CSRGraph, shards: int) -> ShardedPaddedGraph:
+    n_loc = math.ceil(graph.n / shards)
+    n_pad = n_loc * shards
+    md = max(graph.max_out_deg, 1)
+    rp = np.asarray(graph.row_ptr)
+    col = np.asarray(graph.col_idx)
+    degs = np.asarray(graph.out_deg)
+    nbr = np.tile(np.arange(n_pad, dtype=np.int32)[:, None] * 0, (1, md))
+    nbr = np.zeros((n_pad, md), np.int32)
+    valid = np.zeros((n_pad, md), bool)
+    for v in range(graph.n):
+        d = degs[v]
+        nbr[v, :d] = col[rp[v]:rp[v] + d]
+        valid[v, :d] = True
+    deg_pad = np.concatenate([degs, np.zeros(n_pad - graph.n, np.int32)])
+    # static lane bound: edges from shard p to shard q
+    cut = np.zeros((shards, shards), np.int64)
+    owner_of = lambda v: v // n_loc
+    src_owner = np.repeat(np.arange(graph.n) // n_loc, degs)
+    dst_owner = col // n_loc
+    np.add.at(cut, (src_owner, dst_owner), 1)
+    # lanes hold (vertex,count) pairs: at most min(cut, n_loc) distinct
+    lane_cap = int(min(cut.max(), n_loc)) or 1
+    return ShardedPaddedGraph(
+        n=graph.n, n_pad=n_pad, n_loc=n_loc, shards=shards, max_deg=md,
+        nbr=jnp.asarray(nbr.reshape(shards, n_loc, md)),
+        valid=jnp.asarray(valid.reshape(shards, n_loc, md)),
+        deg=jnp.asarray(deg_pad.reshape(shards, n_loc)),
+        lane_cap=lane_cap)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CountDistState:
+    counts: jnp.ndarray   # [P, n_loc]
+    zeta: jnp.ndarray     # [P, n_loc]
+    key: jnp.ndarray      # [P, 2]
+    round: jnp.ndarray
+
+
+def _multinomial_rows(key, survivors, deg, max_deg: int):
+    """Vectorized conditional-binomial split. survivors/deg [n_loc]."""
+    def body(carry, j):
+        rem, k = carry
+        k, kb = jax.random.split(k)
+        slots_left = jnp.maximum(deg - j, 1).astype(jnp.float32)
+        p = jnp.where(j < deg, 1.0 / slots_left, 0.0)
+        t = jax.random.binomial(kb, rem.astype(jnp.float32), p).astype(jnp.int32)
+        t = jnp.minimum(t, rem)
+        return (rem - t, k), t
+
+    (rem, _), T = jax.lax.scan(body, (survivors, key), jnp.arange(max_deg))
+    return T.T, rem  # [n_loc, max_deg]
+
+
+def _superstep(nbr, valid, deg, counts, key, zeta, *, eps: float,
+               n_loc: int, shards: int, max_deg: int, lane_cap: int,
+               packed: bool = True):
+    nbr, valid, deg, counts, key, zeta = (
+        nbr[0], valid[0], deg[0], counts[0], key[0], zeta[0])
+    shard_id = jax.lax.axis_index(AXIS)
+    key, k_term, k_split = jax.random.split(key, 3)
+
+    term = jax.random.binomial(
+        k_term, counts.astype(jnp.float32), eps).astype(jnp.int32)
+    survivors = jnp.where(deg > 0, counts - term, 0)
+    T, _ = _multinomial_rows(k_split, survivors, deg, max_deg)
+    T = jnp.where(valid, T, 0)                          # [n_loc, max_deg]
+
+    flat_dst = nbr.reshape(-1)
+    flat_T = T.reshape(-1)
+    owner = flat_dst // n_loc
+    local_mask = owner == shard_id
+    # local arrivals: direct segment-sum
+    arrive = jax.ops.segment_sum(
+        jnp.where(local_mask, flat_T, 0),
+        jnp.clip(flat_dst - shard_id * n_loc, 0, n_loc - 1),
+        num_segments=n_loc)
+
+    # cross-shard: aggregate counts per destination vertex, then lane-pack
+    # (vertex, count) per target shard. Aggregate first so the lane bound
+    # is #distinct vertices, not #edges.
+    remote_T = jnp.where(local_mask, 0, flat_T)
+    per_vertex = jax.ops.segment_sum(remote_T, flat_dst,
+                                     num_segments=n_loc * shards)
+    vid = jnp.arange(n_loc * shards, dtype=jnp.int32)
+    if packed:
+        # 4B lanes: (local vid:16b | count:15b) — 15-bit count keeps the
+        # packed int32 non-negative (-1 stays the empty sentinel); larger
+        # counts spill into a second entry for the same vertex.
+        CMAX = 32767
+        spill = jnp.maximum(per_vertex - CMAX, 0)
+        c_main = jnp.minimum(per_vertex, CMAX)
+        vid2 = jnp.concatenate([vid, vid])
+        cnt2 = jnp.concatenate([c_main, jnp.minimum(spill, CMAX)])
+    else:
+        vid2 = vid
+        cnt2 = per_vertex
+    has = cnt2 > 0
+    v_owner = vid2 // n_loc
+    sort_key = jnp.where(has, v_owner, shards)
+    order = jnp.argsort(sort_key)
+    # rank within owner group
+    sorted_k = sort_key[order]
+    idx = jnp.arange(vid2.shape[0])
+    is_start = jnp.concatenate([jnp.ones((1,), bool),
+                                sorted_k[1:] != sorted_k[:-1]])
+    run_start = jax.lax.associative_scan(jnp.maximum,
+                                         jnp.where(is_start, idx, 0))
+    rank_sorted = (idx - run_start).astype(jnp.int32)
+    rank = jnp.zeros_like(vid2).at[order].set(rank_sorted)
+    ok = has & (rank < lane_cap)
+    lane_idx = jnp.where(ok, v_owner * lane_cap + rank, shards * lane_cap)
+    if packed:
+        local_vid = (vid2 % n_loc).astype(jnp.int32)
+        payload = local_vid | (cnt2.astype(jnp.int32) << 16)
+        lanes = (jnp.full((shards * lane_cap,), -1, jnp.int32)
+                 .at[lane_idx].set(jnp.where(ok, payload, -1), mode="drop"))
+        overflow = jax.lax.psum(jnp.sum(jnp.where(has & ~ok, cnt2, 0)), AXIS)
+        recv = jax.lax.all_to_all(lanes.reshape(shards, lane_cap), AXIS,
+                                  split_axis=0, concat_axis=0,
+                                  tiled=True).reshape(-1)
+        got = recv >= 0
+        rv = recv & 0xFFFF
+        rc = jnp.where(got, recv >> 16, 0)
+        arrive = arrive + jax.ops.segment_sum(
+            rc, jnp.where(got, rv, 0), num_segments=n_loc)
+        wire_entries = jnp.sum(lanes >= 0)
+        bytes_per = 4
+    else:
+        lanes_v = (jnp.full((shards * lane_cap,), -1, jnp.int32)
+                   .at[lane_idx].set(jnp.where(ok, vid2, -1), mode="drop"))
+        lanes_c = (jnp.zeros((shards * lane_cap,), jnp.int32)
+                   .at[lane_idx].set(jnp.where(ok, cnt2, 0), mode="drop"))
+        overflow = jax.lax.psum(jnp.sum(jnp.where(has & ~ok, cnt2, 0)), AXIS)
+        recv_v = jax.lax.all_to_all(lanes_v.reshape(shards, lane_cap), AXIS,
+                                    split_axis=0, concat_axis=0,
+                                    tiled=True).reshape(-1)
+        recv_c = jax.lax.all_to_all(lanes_c.reshape(shards, lane_cap), AXIS,
+                                    split_axis=0, concat_axis=0,
+                                    tiled=True).reshape(-1)
+        got = recv_v >= 0
+        arrive = arrive + jax.ops.segment_sum(
+            jnp.where(got, recv_c, 0),
+            jnp.clip(recv_v - shard_id * n_loc, 0, n_loc - 1),
+            num_segments=n_loc)
+        wire_entries = jnp.sum(lanes_v >= 0)
+        bytes_per = 8
+
+    new_counts = arrive
+    new_zeta = zeta + arrive
+    active = jax.lax.psum(jnp.sum(new_counts), AXIS)
+    a2a_bytes = jax.lax.psum(wire_entries * bytes_per, AXIS)
+    return (new_counts[None], key[None], new_zeta[None],
+            active, a2a_bytes, overflow)
+
+
+def make_count_superstep(mesh: Mesh, eps: float, sg: ShardedPaddedGraph,
+                         packed: bool = True):
+    fn = partial(_superstep, eps=eps, n_loc=sg.n_loc, shards=sg.shards,
+                 max_deg=sg.max_deg, lane_cap=sg.lane_cap, packed=packed)
+    sharded = shard_map(
+        fn, mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P()),
+    )
+
+    @jax.jit
+    def step(nbr, valid, deg, state: CountDistState):
+        counts, key, zeta, active, a2a, overflow = sharded(
+            nbr, valid, deg, state.counts, state.key, state.zeta)
+        return (CountDistState(counts=counts, zeta=zeta, key=key,
+                               round=state.round + 1),
+                active, a2a, overflow)
+
+    return step
+
+
+@dataclasses.dataclass
+class CountDistResult:
+    zeta: jnp.ndarray
+    pi: jnp.ndarray
+    rounds: int
+    a2a_bytes_total: int
+    overflow: int
+    shards: int
+    lane_cap: int
+
+
+def distributed_pagerank_counts(graph: CSRGraph, eps: float,
+                                walks_per_node: int, key: jnp.ndarray, *,
+                                mesh: Optional[Mesh] = None,
+                                packed: bool = True,
+                                max_rounds: int = 100_000) -> CountDistResult:
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()), (AXIS,))
+    shards = mesh.devices.size
+    sg = shard_graph_padded(graph, shards)
+    spec = NamedSharding(mesh, P(AXIS))
+
+    counts0 = np.zeros((shards, sg.n_loc), np.int32)
+    counts0.reshape(-1)[: graph.n] = walks_per_node
+    keys = jax.random.split(key, shards)
+    state = CountDistState(
+        counts=jax.device_put(jnp.asarray(counts0), spec),
+        zeta=jax.device_put(jnp.asarray(counts0), spec),
+        key=jax.device_put(keys, spec),
+        round=jnp.int32(0))
+    nbr = jax.device_put(sg.nbr, spec)
+    valid = jax.device_put(sg.valid, spec)
+    deg = jax.device_put(sg.deg, spec)
+
+    step = make_count_superstep(mesh, float(eps), sg, packed=packed)
+    a2a_total = 0
+    overflow_total = 0
+    rounds = 0
+    while rounds < max_rounds:
+        state, active, a2a, ovf = step(nbr, valid, deg, state)
+        a2a_total += int(a2a)
+        overflow_total += int(ovf)
+        rounds += 1
+        if int(active) == 0:
+            break
+    zeta = state.zeta.reshape(-1)[: graph.n]
+    pi = zeta.astype(jnp.float32) * (eps / (graph.n * walks_per_node))
+    return CountDistResult(zeta=zeta, pi=pi, rounds=rounds,
+                           a2a_bytes_total=a2a_total,
+                           overflow=overflow_total, shards=shards,
+                           lane_cap=sg.lane_cap)

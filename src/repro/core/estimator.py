@@ -1,0 +1,35 @@
+"""PageRank estimation from visit counters + error metrics."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def pagerank_from_visits(zeta: jnp.ndarray, n: int, walks_per_node: int, eps: float) -> jnp.ndarray:
+    """pi_tilde_v = zeta_v * eps / (n * K)   (Algorithm 1, step 12)."""
+    return zeta.astype(jnp.float32) * (eps / (n * walks_per_node))
+
+
+def normalized(pi: jnp.ndarray) -> jnp.ndarray:
+    return pi / jnp.sum(pi)
+
+
+def l1_error(est, ref) -> float:
+    return float(np.abs(np.asarray(est, dtype=np.float64) - np.asarray(ref, dtype=np.float64)).sum())
+
+
+def linf_error(est, ref) -> float:
+    return float(np.abs(np.asarray(est, dtype=np.float64) - np.asarray(ref, dtype=np.float64)).max())
+
+
+def max_rel_error(est, ref) -> float:
+    est = np.asarray(est, dtype=np.float64)
+    ref = np.asarray(ref, dtype=np.float64)
+    return float((np.abs(est - ref) / np.maximum(ref, 1e-30)).max())
+
+
+def topk_overlap(est, ref, k: int = 10) -> float:
+    """|top-k(est) ∩ top-k(ref)| / k — ranking quality (PageRank's use-case)."""
+    a = set(np.argsort(-np.asarray(est))[:k].tolist())
+    b = set(np.argsort(-np.asarray(ref))[:k].tolist())
+    return len(a & b) / k

@@ -1,0 +1,133 @@
+"""Graph representation for the distributed PageRank engines.
+
+CSR over int32 indices. Device arrays so every engine (count-based,
+walk-array, distributed shard_map) consumes the same structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Compressed-sparse-row adjacency (out-edges).
+
+    Attributes:
+      row_ptr: [n+1] int32, row_ptr[v]..row_ptr[v+1] slice of col_idx.
+      col_idx: [m] int32 destination vertex of each out-edge.
+      out_deg: [n] int32 out-degree (== diff of row_ptr, kept for fast gather).
+      n, m:    static sizes.
+      undirected: True if the edge set is symmetric.
+    """
+
+    row_ptr: jnp.ndarray
+    col_idx: jnp.ndarray
+    out_deg: jnp.ndarray
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+    undirected: bool = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def max_out_deg(self) -> int:
+        return int(np.asarray(self.out_deg).max()) if self.n else 0
+
+    def edge_src(self) -> jnp.ndarray:
+        """[m] int32 source vertex of each edge (expanded from row_ptr)."""
+        return jnp.asarray(
+            np.repeat(np.arange(self.n, dtype=np.int32), np.asarray(self.out_deg)),
+            dtype=jnp.int32,
+        )
+
+
+def from_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n: int,
+    *,
+    undirected: bool = False,
+    dedup: bool = True,
+) -> CSRGraph:
+    """Build a CSRGraph from (src, dst) edge arrays.
+
+    If `undirected`, each edge is inserted in both directions.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if undirected:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    if dedup and len(src):
+        keys = src * n + dst
+        keys = np.unique(keys)
+        src, dst = keys // n, keys % n
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    m = len(src)
+    out_deg = np.bincount(src, minlength=n).astype(np.int32)
+    row_ptr = np.zeros(n + 1, dtype=np.int32)
+    np.cumsum(out_deg, out=row_ptr[1:])
+    return CSRGraph(
+        row_ptr=jnp.asarray(row_ptr),
+        col_idx=jnp.asarray(dst.astype(np.int32)),
+        out_deg=jnp.asarray(out_deg),
+        n=int(n),
+        m=int(m),
+        undirected=bool(undirected),
+    )
+
+
+def padded_adjacency(graph: CSRGraph, max_deg: int | None = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense padded neighbor table for the count engine.
+
+    Returns (nbr [n, max_deg] int32, valid [n, max_deg] bool). Padded slots
+    point at the vertex itself (never selected because valid=False there).
+    """
+    n = graph.n
+    md = max_deg or graph.max_out_deg
+    row_ptr = np.asarray(graph.row_ptr)
+    col = np.asarray(graph.col_idx)
+    deg = np.asarray(graph.out_deg)
+    nbr = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, max(md, 1)))
+    valid = np.zeros((n, max(md, 1)), dtype=bool)
+    for v in range(n):
+        d = deg[v]
+        if d:
+            nbr[v, :d] = col[row_ptr[v] : row_ptr[v] + d]
+            valid[v, :d] = True
+    return jnp.asarray(nbr), jnp.asarray(valid)
+
+
+def transition_matrix(graph: CSRGraph, eps: float) -> np.ndarray:
+    """Dense PageRank transition matrix P = (eps/n)J + (1-eps)Q (row-stochastic).
+
+    Dangling rows of Q get uniform 1/n (Avrachenkov convention — matches the
+    engines, which treat a dangling vertex as an immediate reset).
+    Only for small test graphs.
+    """
+    n = graph.n
+    row_ptr = np.asarray(graph.row_ptr)
+    col = np.asarray(graph.col_idx)
+    deg = np.asarray(graph.out_deg)
+    Q = np.zeros((n, n), dtype=np.float64)
+    for v in range(n):
+        d = deg[v]
+        if d:
+            Q[v, col[row_ptr[v] : row_ptr[v] + d]] += 1.0 / d
+        else:
+            Q[v, :] = 1.0 / n
+    return (eps / n) * np.ones((n, n)) + (1.0 - eps) * Q
+
+
+def exact_pagerank(graph: CSRGraph, eps: float) -> np.ndarray:
+    """Exact stationary distribution of P via eigen-solve (test oracle only)."""
+    P = transition_matrix(graph, eps)
+    w, V = np.linalg.eig(P.T)
+    i = int(np.argmin(np.abs(w - 1.0)))
+    pi = np.real(V[:, i])
+    pi = np.abs(pi)
+    return pi / pi.sum()

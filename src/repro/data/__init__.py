@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, PageRankWeightedSampler,
+                                 SyntheticTokens)
+
+__all__ = ["DataConfig", "PageRankWeightedSampler", "SyntheticTokens"]

@@ -1,0 +1,26 @@
+"""Shared Pallas kernel utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x: jnp.ndarray, multiple: int, axis: int = 0, fill=0) -> jnp.ndarray:
+    size = x.shape[axis]
+    target = cdiv(size, multiple) * multiple
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+def default_interpret() -> bool:
+    """Pallas kernels target TPU; on CPU (this container) run the kernel
+    body in interpret mode — identical semantics, Python execution."""
+    return jax.default_backend() != "tpu"

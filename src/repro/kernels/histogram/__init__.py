@@ -1,0 +1,3 @@
+from repro.kernels.histogram.ops import histogram
+
+__all__ = ["histogram"]

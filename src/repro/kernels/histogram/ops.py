@@ -1,0 +1,12 @@
+"""Jitted public wrapper: Pallas on TPU, interpret elsewhere."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.histogram.histogram import histogram_pallas
+
+
+def histogram(ids: jnp.ndarray, num_segments: int, **kw) -> jnp.ndarray:
+    kw.setdefault("interpret", default_interpret())
+    return histogram_pallas(ids, num_segments, **kw)

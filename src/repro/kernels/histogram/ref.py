@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the histogram kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def histogram_ref(ids: jnp.ndarray, num_segments: int) -> jnp.ndarray:
+    valid = (ids >= 0) & (ids < num_segments)
+    return jax.ops.segment_sum(
+        valid.astype(jnp.int32),
+        jnp.where(valid, ids, num_segments),
+        num_segments=num_segments + 1,
+    )[:num_segments].astype(jnp.int32)

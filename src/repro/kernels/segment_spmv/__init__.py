@@ -1,0 +1,3 @@
+from repro.kernels.segment_spmv.ops import segment_spmv
+
+__all__ = ["segment_spmv"]

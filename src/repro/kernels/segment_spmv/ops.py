@@ -1,0 +1,13 @@
+"""Jitted public wrapper: Pallas on TPU, interpret elsewhere."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.segment_spmv.segment_spmv import segment_spmv_pallas
+
+
+def segment_spmv(values: jnp.ndarray, dst: jnp.ndarray, num_segments: int,
+                 **kw) -> jnp.ndarray:
+    kw.setdefault("interpret", default_interpret())
+    return segment_spmv_pallas(values, dst, num_segments, **kw)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for segment_spmv."""
+import jax
+import jax.numpy as jnp
+
+
+def segment_spmv_ref(values: jnp.ndarray, dst: jnp.ndarray,
+                     num_segments: int) -> jnp.ndarray:
+    valid = (dst >= 0) & (dst < num_segments)
+    return jax.ops.segment_sum(
+        jnp.where(valid, values.astype(jnp.float32), 0.0),
+        jnp.where(valid, dst, num_segments),
+        num_segments=num_segments + 1,
+    )[:num_segments]

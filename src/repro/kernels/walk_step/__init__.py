@@ -1,0 +1,3 @@
+from repro.kernels.walk_step.ops import walk_step
+
+__all__ = ["walk_step"]

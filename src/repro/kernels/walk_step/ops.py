@@ -1,0 +1,12 @@
+"""Jitted public wrapper: Pallas on TPU, interpret elsewhere."""
+from __future__ import annotations
+
+from repro.kernels.common import default_interpret
+from repro.kernels.walk_step.walk_step import walk_step_pallas
+
+
+def walk_step(pos, alive, u_term, u_edge, row_ptr, col_idx, out_deg, *,
+              eps: float, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return walk_step_pallas(pos, alive, u_term, u_edge, row_ptr, col_idx,
+                            out_deg, eps=eps, **kw)

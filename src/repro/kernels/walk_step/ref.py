@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused walk step."""
+import jax.numpy as jnp
+
+
+def walk_step_ref(pos, alive, u_term, u_edge, row_ptr, col_idx, out_deg, *,
+                  eps: float):
+    alive = alive.astype(bool)
+    safe_pos = jnp.clip(pos, 0, out_deg.shape[0] - 1)
+    deg = out_deg[safe_pos]
+    survive = alive & (u_term >= eps) & (deg > 0)
+    j = jnp.minimum((u_edge * jnp.maximum(deg, 1).astype(u_edge.dtype))
+                    .astype(jnp.int32),
+                    jnp.maximum(deg - 1, 0))
+    eid = jnp.clip(row_ptr[safe_pos] + j, 0, col_idx.shape[0] - 1)
+    dst = col_idx[eid]
+    new_pos = jnp.where(survive, dst, pos)
+    return new_pos.astype(jnp.int32), survive.astype(jnp.int32)

@@ -1,0 +1,348 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the *real* step function is lowered against
+ShapeDtypeStruct inputs (no allocation) on the production mesh and
+compiled; we record:
+    memory_analysis()  — proves the cell fits per-device HBM,
+    cost_analysis()    — HLO FLOPs / bytes for §Roofline,
+    HLO collective ops — payload bytes per collective kind (§Roofline).
+
+Results land in results/dryrun/<cell>.json; existing cells are skipped so
+the sweep is restartable cell-by-cell (run via scripts or
+`python -m repro.launch.dryrun --all`).
+
+Cell kinds:
+    train_4k    -> train_step (loss + grads + AdamW/ZeRO update)
+    prefill_32k -> model.prefill
+    decode_32k / long_500k -> model.decode_step against a full cache
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.roofline import build_roofline, model_flops_for
+from repro.configs import (ARCHS, SHAPES, get_config, input_specs,
+                           reduced_config, shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.sharding.rules import ShardingRules, active_rules, default_rules
+from repro.train import AdamWConfig, init_state, make_train_step, state_axes
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def microbatches_for(cfg, multi_pod: bool) -> int:
+    """Per-device microbatch ~1-2 sequences for huge models."""
+    n = cfg.param_count()
+    if n > 100e9:
+        return 16
+    if n > 30e9:
+        return 4
+    return 1
+
+
+def int8_for(cfg) -> bool:
+    return cfg.param_count() > 100e9
+
+
+def param_axes_of(cfg, model):
+    """Logical-axes tree via a reduced same-structure init (cheap)."""
+    rcfg = reduced_config(cfg.name)
+    _, axes = model.init_params(rcfg, jax.random.PRNGKey(0))
+    return axes
+
+
+def cache_axes_of(cfg, model):
+    rcfg = reduced_config(cfg.name)
+    _, axes = model.init_cache(rcfg, 2, 64)
+    return axes
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               q_chunk: int = 512, cfg_override=None, microbatches=None,
+               unroll: bool = False, remat: str = "full"):
+    import contextlib
+
+    from repro.models.common import remat_policy, unroll_scans
+
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    model = get_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(mesh, default_rules(multi_pod))
+    unroll_ctx = contextlib.ExitStack()
+    if unroll:
+        unroll_ctx.enter_context(unroll_scans())
+    if remat != "full":
+        unroll_ctx.enter_context(remat_policy(remat))
+
+    p_axes = param_axes_of(cfg, model)
+    params_sds = jax.eval_shape(
+        lambda k: model.init_params(cfg, k)[0], jax.random.PRNGKey(0))
+    params_sh = rules.tree_shardings(params_sds, p_axes)
+
+    specs = input_specs(cfg, shape)
+
+    with active_rules(rules), unroll_ctx:
+        if shape.kind == "train":
+            adam = AdamWConfig(int8_moments=int8_for(cfg))
+            opt_sds = jax.eval_shape(partial(init_state, cfg=adam), params_sds)
+            opt_sh = rules.tree_shardings(
+                opt_sds, state_axes(p_axes, adam.int8_moments))
+            nm = microbatches if microbatches is not None \
+                else microbatches_for(cfg, multi_pod)
+            step = make_train_step(cfg, model, adam, num_microbatches=nm,
+                                   loss_kwargs=dict(q_chunk=q_chunk))
+            batch_sh = {k: rules.sharding(("batch",) + (None,) * (len(v.shape) - 1),
+                                          v.shape)
+                        for k, v in specs.items()}
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, opt_sh, batch_sh),
+                             out_shardings=(params_sh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_sds, opt_sds, specs)
+        elif shape.kind == "prefill":
+            extra = {k: v for k, v in specs.items() if k != "tokens"}
+
+            def pre_fn(params, tokens, ex):
+                return model.prefill(params, tokens, cfg, q_chunk=q_chunk,
+                                     **ex)
+
+            ex_sh = {k: rules.sharding(("batch",) + (None,) * (len(v.shape) - 1),
+                                       v.shape) for k, v in extra.items()}
+            jitted = jax.jit(pre_fn,
+                             in_shardings=(params_sh,
+                                           rules.sharding(("batch", None),
+                                                          specs["tokens"].shape),
+                                           ex_sh),
+                             out_shardings=None)
+            lowered = jitted.lower(params_sds, specs["tokens"], extra)
+        else:  # decode
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(cfg, shape.global_batch,
+                                         shape.seq_len)[0])
+            c_axes = cache_axes_of(cfg, model)
+            cache_sh = rules.tree_shardings(cache_sds, c_axes)
+
+            def dec_fn(params, cache, token):
+                return model.decode_step(params, cache, token, cfg)
+
+            jitted = jax.jit(dec_fn,
+                             in_shardings=(params_sh, cache_sh,
+                                           rules.sharding(("batch", None),
+                                                          specs["token"].shape)),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_sds, cache_sds, specs["token"])
+    return lowered, cfg, shape, mesh
+
+
+def _measure(arch, shape_name, multi_pod, q_chunk, cfg_override=None,
+             microbatches=None, unroll=False, remat="full"):
+    """Lower+compile, return (flops, bytes, coll_total, coll_breakdown)."""
+    from repro.analysis.hlo import collective_bytes
+
+    lowered, *_ = lower_cell(arch, shape_name, multi_pod, q_chunk=q_chunk,
+                             cfg_override=cfg_override,
+                             microbatches=microbatches, unroll=unroll,
+                             remat=remat)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return dict(flops=float(cost.get("flops", 0.0)),
+                bytes=float(cost.get("bytes accessed", 0.0)),
+                coll=float(sum(coll.values())),
+                breakdown=coll)
+
+
+def calibrated_costs(arch: str, shape_name: str, multi_pod: bool,
+                     q_chunk: int) -> dict:
+    """Corrected whole-step per-chip costs.
+
+    XLA cost_analysis counts while-loop bodies once (trip count ignored), so
+    scanned-layer models under-report by ~L x. We compile small UNROLLED
+    configs at 2 (or 3 for enc-dec) layer counts with full widths and solve
+    the exact linear model  cost = fixed + per_layer * L  (total tokens are
+    microbatch-invariant, so nm drops out of the FLOP/byte/collective
+    totals). Returns per-metric corrected totals + the calibration points.
+    """
+    import dataclasses as dc
+
+    import numpy as np
+
+    cfg = get_config(arch)
+    metrics = ("flops", "bytes", "coll")
+
+    def meas(cfg_i):
+        return _measure(arch, shape_name, multi_pod, q_chunk,
+                        cfg_override=cfg_i, microbatches=1, unroll=True)
+
+    if cfg.family == "audio":
+        if cfg.num_layers + cfg.encoder_layers <= 8:
+            m = _measure(arch, shape_name, multi_pod, q_chunk,
+                         microbatches=1, unroll=True)
+            return dict(corrected={k: m[k] for k in metrics},
+                        breakdown=m["breakdown"], method="direct_unroll")
+        pts = [(dc.replace(cfg, encoder_layers=e, num_layers=d), (1, e, d))
+               for e, d in ((1, 1), (2, 1), (1, 2))]
+        full_feat = (1, cfg.encoder_layers, cfg.num_layers)
+    elif cfg.family == "hybrid":
+        period = len(cfg.block_pattern)
+        trailing = cfg.num_layers % period
+        pts = [(dc.replace(cfg, num_layers=period * g + trailing), (1, g))
+               for g in (1, 2)]
+        full_feat = (1, cfg.num_layers // period)
+    elif cfg.num_experts and cfg.first_dense_layers:
+        fd = cfg.first_dense_layers
+        pts = [(dc.replace(cfg, num_layers=fd + m_), (1, m_))
+               for m_ in (1, 2)]
+        full_feat = (1, cfg.num_layers - fd)
+    else:
+        pts = [(dc.replace(cfg, num_layers=L), (1, L)) for L in (1, 2)]
+        full_feat = (1, cfg.num_layers)
+
+    feats = []
+    vals = []
+    bks = []
+    for cfg_i, feat in pts:
+        m = meas(cfg_i)
+        feats.append(feat)
+        vals.append([m[k] for k in metrics])
+        bks.append(m["breakdown"])
+    A = np.asarray(feats, dtype=np.float64)
+    Y = np.asarray(vals, dtype=np.float64)
+    theta, *_ = np.linalg.lstsq(A, Y, rcond=None)
+    corrected = np.asarray(full_feat, np.float64) @ theta
+    corrected = {k: float(max(corrected[i], 0.0))
+                 for i, k in enumerate(metrics)}
+    # corrected per-kind collective breakdown via the same solve
+    kinds = sorted({k for b in bks for k in b})
+    if kinds:
+        Yb = np.asarray([[b.get(k, 0) for k in kinds] for b in bks],
+                        np.float64)
+        tb, *_ = np.linalg.lstsq(A, Yb, rcond=None)
+        bk_corr = np.asarray(full_feat, np.float64) @ tb
+        breakdown = {k: int(max(v, 0)) for k, v in zip(kinds, bk_corr)}
+    else:
+        breakdown = {}
+    return dict(corrected=corrected, breakdown=breakdown,
+                method="linear_calibration",
+                points=[dict(feat=list(f), vals=dict(zip(metrics, v)))
+                        for f, v in zip(feats, vals)])
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             q_chunk: int = 512, force: bool = False,
+             results_dir: str = RESULTS_DIR) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}"
+    os.makedirs(results_dir, exist_ok=True)
+    out_path = os.path.join(results_dir, cell + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    record = dict(cell=cell, arch=arch, shape=shape_name, mesh=mesh_name,
+                  status="skipped", reason=None)
+    if not shape_applicable(cfg, shape):
+        record["reason"] = ("long_500k needs sub-quadratic attention; "
+                            f"{arch} is full-attention (DESIGN.md "
+                            "§Arch-applicability)")
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2)
+        return record
+
+    t0 = time.time()
+    try:
+        lowered, cfg, shape, mesh = lower_cell(arch, shape_name, multi_pod,
+                                               q_chunk=q_chunk)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        mem_d = {k: getattr(mem, k) for k in dir(mem)
+                 if k.endswith("_bytes") or k.endswith("bytes")}
+        mem_d = {k: int(v) for k, v in mem_d.items() if isinstance(v, int)}
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        chips = int(mesh.devices.size)
+        raw_roof = build_roofline(arch, shape_name, mesh_name, chips,
+                                  cost, mem_d, hlo,
+                                  model_flops_for(cfg, shape))
+        # calibrated (scan-trip-count-corrected) costs — see calibrated_costs
+        t_cal = time.time()
+        cal = calibrated_costs(arch, shape_name, multi_pod, q_chunk)
+        cal_cost = {"flops": cal["corrected"]["flops"],
+                    "bytes accessed": cal["corrected"]["bytes"]}
+        roof = build_roofline(arch, shape_name, mesh_name, chips,
+                              cal_cost, mem_d, "",
+                              model_flops_for(cfg, shape))
+        roof.coll_bytes = cal["corrected"]["coll"]
+        roof.coll_breakdown = cal["breakdown"]
+        roof.coll_ops = raw_roof.coll_ops
+        record |= dict(
+            status="ok",
+            t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+            t_calibrate_s=round(time.time() - t_cal, 1),
+            memory=mem_d,
+            cost=dict(flops=float(cost.get("flops", 0.0)),
+                      bytes_accessed=float(cost.get("bytes accessed", 0.0))),
+            roofline=roof.to_dict(),
+            roofline_raw=raw_roof.to_dict(),
+            calibration=dict(method=cal["method"],
+                             points=cal.get("points", [])),
+            params_total=cfg.param_count(),
+            params_active=cfg.active_param_count(),
+        )
+    except Exception as e:  # noqa: BLE001 — sweep must survive cell failures
+        record |= dict(status="error", reason=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-4000:])
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, mp, q_chunk=args.q_chunk,
+                             force=args.force)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" compile={r['t_compile_s']}s "
+                             f"bottleneck={r['roofline']['bottleneck']}")
+                elif status == "error":
+                    extra = f" {r['reason'][:120]}"
+                print(f"[{status:7s}] {r['cell']}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Distributed PageRank driver: sharded engine + fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.pagerank --n 512 --eps 0.2 \
+        --walks 64 --graph erdos_renyi --checkpoint-dir /tmp/pr_ckpt
+
+Runs Algorithm 1 on all available devices via the shard_map engine under
+the checkpoint-restart supervisor (optionally with injected failures to
+demonstrate exact recovery), then validates against power iteration.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import Checkpointer
+from repro.core import l1_error, normalized, power_iteration, topk_overlap
+from repro.core.distributed import (AXIS, DistState, _make_superstep,
+                                    shard_graph, state_from_host,
+                                    state_to_host)
+from repro.graphs import GENERATORS
+from repro.runtime import FailureSchedule, Supervisor
+
+import jax.numpy as jnp
+
+
+def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
+        checkpoint_dir: str | None, fail_at: list[int], seed: int = 0):
+    g = GENERATORS[graph_kind](n, 6.0, seed) if graph_kind != "ring" \
+        else GENERATORS[graph_kind](n)
+    devs = np.array(jax.devices())
+    mesh = Mesh(devs, (AXIS,))
+    shards = devs.size
+    sg = shard_graph(g, shards)
+    W = g.n * walks_per_node
+    cap = 2 * W // shards + shards * 64
+    route_cap = W // shards + 64
+
+    pos0 = np.full((shards, cap), -1, np.int32)
+    zeta0 = np.zeros((shards, sg.n_loc), np.int32)
+    for p in range(shards):
+        lo = min(p * sg.n_loc, g.n)
+        hi = min((p + 1) * sg.n_loc, g.n)
+        locs = np.repeat(np.arange(lo, hi, dtype=np.int32), walks_per_node)
+        pos0[p, : len(locs)] = locs
+        zeta0[p, : hi - lo] = walks_per_node
+    spec = NamedSharding(mesh, P(AXIS))
+    keys = jax.random.split(jax.random.PRNGKey(seed), shards)
+    state = DistState(pos=jax.device_put(jnp.asarray(pos0), spec),
+                      zeta=jax.device_put(jnp.asarray(zeta0), spec),
+                      key=jax.device_put(keys, spec),
+                      round=jnp.int32(0), dropped=jnp.int32(0),
+                      waited=jnp.int32(0))
+    rp, ci, dg = (jax.device_put(x, spec)
+                  for x in (sg.row_ptr, sg.col_idx, sg.out_deg))
+    step = _make_superstep(mesh, eps, sg.n_loc, shards, route_cap, 0)
+
+    def step_fn(s):
+        s2, active, _ = step(rp, ci, dg, s)
+        return s2, int(active) == 0
+
+    ckpt_dir = checkpoint_dir or tempfile.mkdtemp(prefix="pr_ckpt_")
+    sup = Supervisor(step_fn, state_to_host,
+                     lambda f: state_from_host(f, mesh),
+                     Checkpointer(ckpt_dir), checkpoint_every=10,
+                     failure_schedule=FailureSchedule(fail_at) if fail_at
+                     else None)
+    res = sup.run(state)
+    zeta = np.asarray(res.state.zeta).reshape(-1)[: g.n]
+    pi = zeta.astype(np.float64) * eps / (g.n * walks_per_node)
+    pi_ref, _, _ = power_iteration(g, eps)
+    print(f"[pagerank] n={n} shards={shards} rounds={res.rounds} "
+          f"restarts={res.restarts} dropped={int(res.state.dropped)}")
+    print(f"[pagerank] L1 vs power-iter: "
+          f"{l1_error(pi / pi.sum(), pi_ref):.4f}  "
+          f"top-10 overlap: {topk_overlap(pi, np.asarray(pi_ref)):.2f}")
+    return pi
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--eps", type=float, default=0.2)
+    ap.add_argument("--walks", type=int, default=64)
+    ap.add_argument("--graph", default="erdos_renyi",
+                    choices=sorted(GENERATORS))
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    args = ap.parse_args()
+    run(args.n, args.eps, args.walks, args.graph, args.checkpoint_dir,
+        args.fail_at)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,354 @@
+"""Attention: GQA (+bias, +qk-norm, +sliding-window) and MLA (DeepSeek-V2).
+
+Memory discipline:
+  * train/prefill run *blockwise over query chunks* (scores never exceed
+    [B, KV, G, q_chunk, S] per step — flash-style, exact softmax since the
+    full key axis is resident per chunk);
+  * decode is a single-step attention over the cache; MLA decode uses the
+    absorbed form (scores against the compressed c_kv latent — the cache is
+    never decompressed, which is what makes 32k×128-batch decode fit).
+
+KV caches are laid out [B, S_max, ...] with logical axes
+("batch", "cache_seq", ...) — cache_seq is sharded over the model axis at
+decode shapes (flash-decoding split-KV; GSPMD inserts the softmax combine).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import maybe_scan
+from repro.models.common import (COMPUTE_DTYPE, PARAM_DTYPE, apply_rope,
+                                 dense_init, ones_init, rms_norm,
+                                 rope_tables, zeros_init)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def _padded_heads(cfg) -> int:
+    return max(cfg.pad_q_heads_to or 0, cfg.num_heads)
+
+
+def _head_mask(cfg):
+    """[Hp] 1/0 mask; padded heads are zeroed before the out projection so
+    they neither contribute output nor receive gradients (exactness)."""
+    Hp, H = _padded_heads(cfg), cfg.num_heads
+    if Hp == H:
+        return None
+    return (jnp.arange(Hp) < H).astype(COMPUTE_DTYPE)
+
+
+def init_gqa(key, cfg):
+    d, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    Hp = _padded_heads(cfg)
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+
+    def padh(w):  # zero-init padded head slots
+        return jnp.zeros((d, Hp, hd), w.dtype).at[:, :H].set(w) \
+            if Hp != H else w
+
+    p = dict(
+        wq=padh(dense_init(ks[0], (d, H, hd), d)),
+        wk=dense_init(ks[1], (d, KV, hd), d),
+        wv=dense_init(ks[2], (d, KV, hd), d),
+        wo=(jnp.zeros((Hp, hd, d), PARAM_DTYPE)
+            .at[:H].set(dense_init(ks[3], (H, hd, d), H * hd))
+            if Hp != H else dense_init(ks[3], (H, hd, d), H * hd)),
+    )
+    a = dict(
+        wq=("embed", "q_heads", "head_dim"),
+        wk=("embed", "kv_heads", "head_dim"),
+        wv=("embed", "kv_heads", "head_dim"),
+        wo=("q_heads", "head_dim", "embed"),
+    )
+    if cfg.qkv_bias:
+        p |= dict(bq=zeros_init((Hp, hd)), bk=zeros_init((KV, hd)),
+                  bv=zeros_init((KV, hd)))
+        a |= dict(bq=("q_heads", "head_dim"), bk=("kv_heads", "head_dim"),
+                  bv=("kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        p |= dict(q_norm=zeros_init((hd,)), k_norm=zeros_init((hd,)))
+        a |= dict(q_norm=("head_dim",), k_norm=("head_dim",))
+    return p, a
+
+
+def _qkv(p, x, cfg, positions):
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(COMPUTE_DTYPE))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(COMPUTE_DTYPE))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(COMPUTE_DTYPE))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(COMPUTE_DTYPE)
+        k = k + p["bk"].astype(COMPUTE_DTYPE)
+        v = v + p["bv"].astype(COMPUTE_DTYPE)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _grouped_scores(q, k):
+    """q [B,T,H,hd], k [B,S,KV,hd] -> scores [B,KV,G,T,S] fp32."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, T, KV, G, hd)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                   preferred_element_type=jnp.float32)
+    return s / math.sqrt(hd)
+
+
+def _grouped_out(probs, v):
+    """probs [B,KV,G,T,S] fp32, v [B,S,KV,hd] -> [B,T,H,hd]."""
+    B, KV, G, T, S = probs.shape
+    out = jnp.einsum("bkgts,bskd->btkgd", probs.astype(COMPUTE_DTYPE), v)
+    return out.reshape(B, T, KV * G, v.shape[-1])
+
+
+def _causal_mask(q_pos, k_pos, window: Optional[int]):
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def gqa_forward(p, x, cfg, positions, *, q_chunk: int = 512):
+    """Full-sequence causal attention, blockwise over query chunks.
+
+    positions: [T] int32 (shared across the batch; no packing).
+    """
+    B, T, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions[None, :])
+    n_chunks = T // q_chunk if (q_chunk < T and T % q_chunk == 0) else 1
+    qc = T // n_chunks
+    q_chunks = jnp.moveaxis(q.reshape(B, n_chunks, qc, *q.shape[2:]), 1, 0)
+    p_chunks = positions.reshape(n_chunks, qc)
+
+    def chunk_fn(carry, inp):
+        qi, qpi = inp  # [B, qc, H, hd], [qc]
+        s = _grouped_scores(qi, k)  # [B,KV,G,qc,S]
+        mask = _causal_mask(qpi, positions, cfg.sliding_window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1)
+        return carry, _grouped_out(probs, v)
+
+    _, outs = maybe_scan(chunk_fn, None, (q_chunks, p_chunks))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, T, q.shape[2], q.shape[3])
+    mask_h = _head_mask(cfg)
+    if mask_h is not None:
+        out = out * mask_h[None, None, :, None]
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(COMPUTE_DTYPE))
+
+
+def pad_stacked_cache(cache: dict, max_seq: int, cfg, prompt_len: int) -> dict:
+    """Grow a prefill-built stacked cache ([L, B, S, ...]) to decode
+    capacity `max_seq` along the sequence axis (axis=2).
+
+    Sliding-window caches are ring buffers of size `window`; instead of
+    padding they are rolled so the ring invariant slot == token % window
+    holds for subsequent decode steps."""
+    def pad(x):
+        return jnp.pad(x, [(0, 0), (0, 0), (0, max_seq - x.shape[2])] +
+                       [(0, 0)] * (x.ndim - 3))
+
+    if "k" in cache:  # GQA
+        S = cache["k"].shape[2]
+        if cfg.sliding_window:
+            # ring buffer of size min(window, max_seq); invariant:
+            # slot == token % size
+            target = min(cfg.sliding_window, max_seq)
+            if S == target and prompt_len >= target:
+                shift = prompt_len % target
+                return dict(cache, k=jnp.roll(cache["k"], shift, axis=2),
+                            v=jnp.roll(cache["v"], shift, axis=2))
+            if S < target:
+                def padw(x):
+                    return jnp.pad(x, [(0, 0), (0, 0), (0, target - S)] +
+                                   [(0, 0)] * (x.ndim - 3))
+                return dict(cache, k=padw(cache["k"]), v=padw(cache["v"]))
+            return cache
+        if S < max_seq:
+            return dict(cache, k=pad(cache["k"]), v=pad(cache["v"]))
+        return cache
+    # MLA
+    if cache["c_kv"].shape[2] < max_seq:
+        return dict(cache, c_kv=pad(cache["c_kv"]),
+                    k_rope=pad(cache["k_rope"]))
+    return cache
+
+
+def init_gqa_cache(cfg, batch: int, max_seq: int):
+    """idx is a per-sequence position vector [B] — decode slots advance
+    independently (continuous batching admits requests at any time)."""
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    seq = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    c = dict(
+        k=jnp.zeros((batch, seq, KV, hd), COMPUTE_DTYPE),
+        v=jnp.zeros((batch, seq, KV, hd), COMPUTE_DTYPE),
+        idx=jnp.zeros((batch,), jnp.int32),
+    )
+    a = dict(k=("batch", "cache_seq", "kv_heads", "head_dim"),
+             v=("batch", "cache_seq", "kv_heads", "head_dim"),
+             idx=("batch",))
+    return c, a
+
+
+def gqa_decode(p, x, cfg, cache):
+    """One-token decode. x [B,1,d]. Sliding-window caches are ring buffers;
+    per-sequence positions cache['idx'] [B]."""
+    B = x.shape[0]
+    idx = cache["idx"]                          # [B]
+    positions = idx[:, None]
+    q, k, v = _qkv(p, x, cfg, positions)
+    S = cache["k"].shape[1]
+    slot = idx % S if cfg.sliding_window else jnp.minimum(idx, S - 1)
+    bidx = jnp.arange(B)
+    k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+    v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+    s = _grouped_scores(q, k_cache)  # [B,KV,G,1,S]
+    kpos = jnp.arange(S)
+    if cfg.sliding_window:
+        # ring buffer: valid slots are the last min(idx+1, S) writes
+        age = (slot[:, None] - kpos[None, :]) % S
+        valid = age < jnp.minimum(idx + 1, S)[:, None]
+    else:
+        valid = kpos[None, :] <= idx[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = _grouped_out(probs, v_cache)
+    mask_h = _head_mask(cfg)
+    if mask_h is not None:
+        out = out * mask_h[None, None, :, None]
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(COMPUTE_DTYPE))
+    return y, dict(k=k_cache, v=v_cache, idx=idx + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg):
+    d, H = cfg.d_model, cfg.num_heads
+    nope, rope_d, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qlr, kvlr = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    p = dict(
+        wq_a=dense_init(ks[0], (d, qlr), d),
+        q_norm=zeros_init((qlr,)),
+        wq_b=dense_init(ks[1], (qlr, H, nope + rope_d), qlr),
+        wkv_a=dense_init(ks[2], (d, kvlr + rope_d), d),
+        kv_norm=zeros_init((kvlr,)),
+        wkv_b_k=dense_init(ks[3], (kvlr, H, nope), kvlr),
+        wkv_b_v=dense_init(ks[4], (kvlr, H, vh), kvlr),
+        wo=dense_init(ks[5], (H, vh, d), H * vh),
+    )
+    a = dict(
+        wq_a=("embed", "q_lora"), q_norm=("q_lora",),
+        wq_b=("q_lora", "q_heads", "head_dim"),
+        wkv_a=("embed", "kv_lora"), kv_norm=("kv_lora",),
+        wkv_b_k=("kv_lora", "q_heads", "head_dim"),
+        wkv_b_v=("kv_lora", "q_heads", "head_dim"),
+        wo=("q_heads", "head_dim", "embed"),
+    )
+    return p, a
+
+
+def _mla_q(p, x, cfg, positions):
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_lat = rms_norm(jnp.einsum("btd,dr->btr", x, p["wq_a"].astype(COMPUTE_DTYPE)),
+                     p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("btr,rhk->bthk", q_lat, p["wq_b"].astype(COMPUTE_DTYPE))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_tables(positions, rope_d, cfg.rope_theta)
+    return q_nope, apply_rope(q_rope, cos, sin)
+
+
+def _mla_kv_latent(p, x, cfg, positions):
+    kvlr, rope_d = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv = jnp.einsum("btd,dr->btr", x, p["wkv_a"].astype(COMPUTE_DTYPE))
+    c_kv = rms_norm(kv[..., :kvlr], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., None, kvlr:]  # [B,T,1,rope_d] shared across heads
+    cos, sin = rope_tables(positions, rope_d, cfg.rope_theta)
+    return c_kv, apply_rope(k_rope, cos, sin)[..., 0, :]
+
+
+def mla_forward(p, x, cfg, positions, *, q_chunk: int = 512):
+    """Train/prefill MLA: decompress keys per query chunk (exact)."""
+    B, T, _ = x.shape
+    nope, vh = cfg.qk_nope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, x, cfg, positions[None, :])
+    c_kv, k_rope = _mla_kv_latent(p, x, cfg, positions[None, :])
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["wkv_b_k"].astype(COMPUTE_DTYPE))
+    v = jnp.einsum("btr,rhk->bthk", c_kv, p["wkv_b_v"].astype(COMPUTE_DTYPE))
+    scale = 1.0 / math.sqrt(nope + cfg.qk_rope_head_dim)
+    n_chunks = T // q_chunk if (q_chunk < T and T % q_chunk == 0) else 1
+    qn = jnp.moveaxis(q_nope.reshape(B, n_chunks, -1, *q_nope.shape[2:]), 1, 0)
+    qr = jnp.moveaxis(q_rope.reshape(B, n_chunks, -1, *q_rope.shape[2:]), 1, 0)
+    qpos = positions.reshape(n_chunks, -1)
+
+    def chunk_fn(_, inp):
+        qni, qri, qpi = inp
+        s = (jnp.einsum("bthk,bshk->bhts", qni, k_nope,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bthk,bsk->bhts", qri, k_rope,
+                          preferred_element_type=jnp.float32)) * scale
+        mask = _causal_mask(qpi, positions, None)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1).astype(COMPUTE_DTYPE)
+        return None, jnp.einsum("bhts,bshk->bthk", probs, v)
+
+    _, outs = maybe_scan(chunk_fn, None, (qn, qr, qpos))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, T, cfg.num_heads, vh)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(COMPUTE_DTYPE))
+
+
+def init_mla_cache(cfg, batch: int, max_seq: int):
+    c = dict(
+        c_kv=jnp.zeros((batch, max_seq, cfg.kv_lora_rank), COMPUTE_DTYPE),
+        k_rope=jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), COMPUTE_DTYPE),
+        idx=jnp.zeros((batch,), jnp.int32),
+    )
+    a = dict(c_kv=("batch", "cache_seq", "kv_lora"),
+             k_rope=("batch", "cache_seq", "head_dim"), idx=("batch",))
+    return c, a
+
+
+def mla_decode(p, x, cfg, cache):
+    """Absorbed-form decode: attention runs against the compressed latent."""
+    B = x.shape[0]
+    idx = cache["idx"]                                 # [B]
+    positions = idx[:, None]
+    nope, vh = cfg.qk_nope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)      # [B,1,H,*]
+    c_new, kr_new = _mla_kv_latent(p, x, cfg, positions)
+    S = cache["c_kv"].shape[1]
+    bidx = jnp.arange(B)
+    slot = jnp.minimum(idx, S - 1)
+    c_kv = cache["c_kv"].at[bidx, slot].set(c_new[:, 0])
+    k_rope = cache["k_rope"].at[bidx, slot].set(kr_new[:, 0])
+    # absorb W^UK into q: q_c [B,1,H,kv_lora]
+    q_c = jnp.einsum("bthk,rhk->bthr", q_nope, p["wkv_b_k"].astype(COMPUTE_DTYPE))
+    scale = 1.0 / math.sqrt(nope + cfg.qk_rope_head_dim)
+    s = (jnp.einsum("bthr,bsr->bhts", q_c, c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bthk,bsk->bhts", q_rope, k_rope,
+                      preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(S)[None, :] <= idx[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1).astype(COMPUTE_DTYPE)
+    # attend in latent space then decompress: out_lat [B,1,H? no—]
+    out_lat = jnp.einsum("bhts,bsr->bthr", probs, c_kv)   # [B,1,H,kv_lora]
+    out = jnp.einsum("bthr,rhk->bthk", out_lat, p["wkv_b_v"].astype(COMPUTE_DTYPE))
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(COMPUTE_DTYPE))
+    return y, dict(c_kv=c_kv, k_rope=k_rope, idx=idx + 1)

@@ -1,0 +1,181 @@
+"""Shared model components: norms, RoPE, embeddings, init helpers.
+
+Convention: every `init_*` returns `(params, axes)` — two pytrees with
+identical structure, where each axes leaf is a tuple of *logical* axis names
+(one per array dim). The sharding rules engine (sharding/rules.py) maps
+logical axes to mesh axes. Stacked-layer params get a leading "layers" axis
+(never sharded; scanned over).
+
+Compute dtype is bf16 for matmuls, fp32 for softmax/norm/reductions;
+parameters are stored bf16 (fp32 masters live in the optimizer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PARAM_DTYPE = jnp.bfloat16
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, shape, fan_in, dtype=PARAM_DTYPE):
+    return (jax.random.normal(key, shape, jnp.float32) /
+            jnp.sqrt(jnp.maximum(fan_in, 1))).astype(dtype)
+
+
+def zeros_init(shape, dtype=PARAM_DTYPE):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape, dtype=PARAM_DTYPE):
+    return jnp.ones(shape, dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_tables(positions: jnp.ndarray, dim: int, theta: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions [...] -> (cos, sin) [..., dim//2] fp32."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x [..., T, H, D]; cos/sin [..., T, D//2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d_model: int):
+    p = dict(table=dense_init(key, (vocab, d_model), d_model))
+    a = dict(table=("vocab", "embed"))
+    return p, a
+
+
+def embed(params, tokens):
+    return params["table"][tokens].astype(COMPUTE_DTYPE)
+
+
+def unembed(params, x):
+    """Logits in fp32 (vocab-sharded logsumexp-friendly)."""
+    return jnp.einsum("...d,vd->...v", x.astype(COMPUTE_DTYPE),
+                      params["table"]).astype(jnp.float32)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean next-token CE. logits [B,T,V] fp32, labels [B,T] int32."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+# ---------------------------------------------------------------------------
+# scan-vs-unroll: XLA's cost_analysis() counts a while-loop body ONCE,
+# ignoring the trip count, so scanned-layer models under-report FLOPs/bytes
+# by ~L x microbatches. The dry-run calibrates corrected roofline terms by
+# compiling small configurations with every scan unrolled (this context) and
+# solving the linear cost model — see launch/dryrun.py.
+# ---------------------------------------------------------------------------
+import contextlib as _contextlib
+import threading as _threading
+
+_unroll_local = _threading.local()
+
+
+@_contextlib.contextmanager
+def unroll_scans(flag: bool = True):
+    prev = getattr(_unroll_local, "flag", False)
+    _unroll_local.flag = flag
+    try:
+        yield
+    finally:
+        _unroll_local.flag = prev
+
+
+def unrolling() -> bool:
+    return getattr(_unroll_local, "flag", False)
+
+
+_policy_local = _threading.local()
+
+
+@_contextlib.contextmanager
+def remat_policy(name: str):
+    """Active rematerialization policy for layer scans:
+    "full" (save nothing — default), "dots" (save matmul outputs),
+    "none" (no remat)."""
+    prev = getattr(_policy_local, "name", "full")
+    _policy_local.name = name
+    try:
+        yield
+    finally:
+        _policy_local.name = prev
+
+
+def ckpt(f):
+    """jax.checkpoint with the active policy (see remat_policy)."""
+    name = getattr(_policy_local, "name", "full")
+    if name == "none":
+        return f
+    if name == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(f)
+
+
+def maybe_scan(f, init, xs, length=None):
+    """jax.lax.scan, or a Python unroll under `unroll_scans()` (identical
+    semantics; used so cost_analysis sees every iteration)."""
+    if not unrolling():
+        return jax.lax.scan(f, init, xs, length=length)
+    n = length if xs is None else jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        xi = None if xs is None else jax.tree_util.tree_map(
+            lambda a: a[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    if ys and jax.tree_util.tree_leaves(ys[0]):
+        ys_st = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys_st = None
+    return carry, ys_st
+
+
+def prepend_layers_axis(axes_tree):
+    return jax.tree_util.tree_map(lambda a: ("layers",) + a, axes_tree,
+                                  is_leaf=_is_axes_leaf)
+
+
+def stack_init(init_fn, key, n_layers: int):
+    """vmap `init_fn(key) -> (params, axes)` over layer keys; returns
+    params stacked on a leading (scanned, never-sharded) 'layers' axis."""
+    keys = jax.random.split(key, n_layers)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(keys[0])
+    return params, prepend_layers_axis(axes)

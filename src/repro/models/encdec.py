@@ -1,0 +1,224 @@
+"""Whisper-style encoder-decoder backbone (audio).
+
+Per the assignment the conv frontend is a STUB: `input_specs()` provides
+precomputed frame embeddings [B, encoder_seq, d] (what the two strided
+convs would produce). The backbone is real: bidirectional encoder layers,
+causal decoder layers with cross-attention into the encoder states.
+
+Serving: `prefill` runs the encoder once and caches (decoder self KV,
+cross KV); `decode_step` advances the decoder one token.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models.common import ckpt, maybe_scan
+from repro.models.common import (COMPUTE_DTYPE, cross_entropy, dense_init,
+                                 embed, init_embedding, prepend_layers_axis,
+                                 rms_norm, stack_init, unembed, zeros_init)
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.sharding.rules import maybe_constrain
+
+
+def init_cross_attn(key, cfg):
+    # same projection structure as self-attention
+    return attn_lib.init_gqa(key, cfg)
+
+
+def cross_attn_forward(p, x, enc_kv, cfg):
+    """x [B,T,d] queries; enc_kv = (k, v) [B,S,KV,hd] precomputed."""
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(COMPUTE_DTYPE))
+    k, v = enc_kv
+    s = attn_lib._grouped_scores(q, k)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = attn_lib._grouped_out(probs, v)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(COMPUTE_DTYPE))
+
+
+def cross_kv(p, enc_states, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", enc_states, p["wk"].astype(COMPUTE_DTYPE))
+    v = jnp.einsum("bsd,dhk->bshk", enc_states, p["wv"].astype(COMPUTE_DTYPE))
+    return k, v
+
+
+def init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    ap, aa = attn_lib.init_gqa(k1, cfg)
+    mp, ma = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp)
+    return (dict(ln1=zeros_init((cfg.d_model,)), attn=ap,
+                 ln2=zeros_init((cfg.d_model,)), mlp=mp),
+            dict(ln1=("embed",), attn=aa, ln2=("embed",), mlp=ma))
+
+
+def enc_layer_forward(p, x, cfg, positions):
+    """Bidirectional self-attention (no causal mask)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = attn_lib._qkv(p["attn"], h, cfg, positions[None, :])
+    s = attn_lib._grouped_scores(q, k)
+    out = attn_lib._grouped_out(jax.nn.softmax(s, axis=-1), v)
+    y = jnp.einsum("bthk,hkd->btd", out, p["attn"]["wo"].astype(COMPUTE_DTYPE))
+    x = x + y
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp_forward(p["mlp"], h2, cfg.mlp)
+
+
+def init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    sp, sa = attn_lib.init_gqa(k1, cfg)
+    cp, ca = init_cross_attn(k2, cfg)
+    mp, ma = init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp)
+    p = dict(ln1=zeros_init((cfg.d_model,)), self_attn=sp,
+             ln_x=zeros_init((cfg.d_model,)), cross_attn=cp,
+             ln2=zeros_init((cfg.d_model,)), mlp=mp)
+    a = dict(ln1=("embed",), self_attn=sa, ln_x=("embed",), cross_attn=ca,
+             ln2=("embed",), mlp=ma)
+    return p, a
+
+
+def dec_layer_forward(p, x, enc_kv, cfg, positions, q_chunk=512):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + attn_lib.gqa_forward(p["self_attn"], h, cfg, positions,
+                                 q_chunk=q_chunk)
+    h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+    x = x + cross_attn_forward(p["cross_attn"], h, enc_kv, cfg)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp_forward(p["mlp"], h, cfg.mlp)
+
+
+def dec_layer_decode(p, x, cache, enc_kv, cfg):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, cache = attn_lib.gqa_decode(p["self_attn"], h, cfg, cache)
+    x = x + y
+    h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+    x = x + cross_attn_forward(p["cross_attn"], h, enc_kv, cfg)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp_forward(p["mlp"], h, cfg.mlp), cache
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["embed"], a["embed"] = init_embedding(ks[0], cfg.vocab_size, cfg.d_model)
+    p["enc_layers"], a["enc_layers"] = stack_init(
+        lambda k: init_enc_layer(k, cfg), ks[1], cfg.encoder_layers)
+    p["dec_layers"], a["dec_layers"] = stack_init(
+        lambda k: init_dec_layer(k, cfg), ks[2], cfg.num_layers)
+    p["enc_norm"], a["enc_norm"] = zeros_init((cfg.d_model,)), ("embed",)
+    p["final_norm"], a["final_norm"] = zeros_init((cfg.d_model,)), ("embed",)
+    if not cfg.tie_embeddings:
+        p["lm_head"], a["lm_head"] = init_embedding(ks[3], cfg.vocab_size,
+                                                    cfg.d_model)
+    return p, a
+
+
+def encode(params, frames, cfg):
+    """frames [B, S_enc, d] (stub conv-frontend output)."""
+    x = frames.astype(COMPUTE_DTYPE)
+    positions = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+    def body(h, lp):
+        f = ckpt(lambda q, hh: enc_layer_forward(q, hh, cfg,
+                                                           positions))
+        return f(lp, h), None
+
+    x, _ = maybe_scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_logits(params, hidden, cfg):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(table, hidden)
+
+
+def loss_fn(params, batch, cfg, *, q_chunk: int = 512, **_):
+    tokens, labels, frames = batch["tokens"], batch["labels"], batch["frames"]
+    enc = encode(params, frames, cfg)
+    x = embed(params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    def body(h, lp):
+        kv = cross_kv(lp["cross_attn"], enc, cfg)
+        f = ckpt(
+            lambda q, hh: dec_layer_forward(q, hh, kv, cfg, positions,
+                                            q_chunk=q_chunk))
+        return f(lp, h), None
+
+    x, _ = maybe_scan(body, x, params["dec_layers"])
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    ce = cross_entropy(_dec_logits(params, hidden, cfg), labels)
+    return ce, dict(ce=ce, aux=jnp.float32(0))
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    self_c, self_ax = attn_lib.init_gqa_cache(cfg, batch, max_seq)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L = cfg.num_layers
+
+    def stack(c):
+        return jax.tree_util.tree_map(
+            lambda v: jnp.broadcast_to(v, (L,) + v.shape).copy(), c)
+
+    cache = dict(
+        self=stack(self_c),
+        cross_k=jnp.zeros((L, batch, cfg.encoder_seq, KV, hd), COMPUTE_DTYPE),
+        cross_v=jnp.zeros((L, batch, cfg.encoder_seq, KV, hd), COMPUTE_DTYPE),
+    )
+    axes = dict(self=prepend_layers_axis(self_ax),
+                cross_k=("layers", "batch", None, "kv_heads", "head_dim"),
+                cross_v=("layers", "batch", None, "kv_heads", "head_dim"))
+    return cache, axes
+
+
+def prefill(params, tokens, cfg, *, frames=None, q_chunk: int = 512,
+            pad_cache_to=None, **_):
+    """Encode frames, run the decoder over `tokens`, return caches."""
+    B_, T = tokens.shape
+    if frames is None:
+        frames = jnp.zeros((B_, cfg.encoder_seq, cfg.d_model), COMPUTE_DTYPE)
+    enc = encode(params, frames, cfg)
+    x = embed(params["embed"], tokens)
+    positions = jnp.arange(T, dtype=jnp.int32)
+    idxT = jnp.full((B_,), T, jnp.int32)
+
+    def body(h, lp):
+        kv = cross_kv(lp["cross_attn"], enc, cfg)
+        h2 = dec_layer_forward(lp, h, kv, cfg, positions, q_chunk=q_chunk)
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        _, sk, sv = attn_lib._qkv(lp["self_attn"], hn, cfg, positions[None, :])
+        return h2, dict(self=dict(k=sk, v=sv, idx=idxT),
+                        cross=kv)
+
+    x, caches = maybe_scan(body, x, params["dec_layers"])
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    self_c = caches["self"]
+    if pad_cache_to:
+        self_c = attn_lib.pad_stacked_cache(self_c, pad_cache_to, cfg, T)
+    cache = dict(self=self_c, cross_k=caches["cross"][0],
+                 cross_v=caches["cross"][1])
+    return _dec_logits(params, hidden[:, -1:], cfg), cache
+
+
+def decode_step(params, cache, token, cfg):
+    x = embed(params["embed"], token)
+
+    def body(h, xs):
+        lp, sc, ck, cv = xs
+        h2, sc2 = dec_layer_decode(lp, h, sc, (ck, cv), cfg)
+        return h2, sc2
+
+    x, new_self = maybe_scan(
+        body, x, (params["dec_layers"], cache["self"],
+                  cache["cross_k"], cache["cross_v"]))
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    new_cache = dict(self=new_self, cross_k=cache["cross_k"],
+                     cross_v=cache["cross_v"])
+    return _dec_logits(params, hidden, cfg), new_cache

@@ -1,0 +1,273 @@
+"""Mamba-2 (SSD — state-space duality) language model.
+
+Train/prefill use the chunked dual form (block-quadratic intra-chunk +
+linear inter-chunk state passing, chunk = cfg.ssm_chunk); decode is the O(1)
+recurrent update on a [B, H, P, N] state. Attention-free: the long_500k
+decode shape runs with constant memory.
+
+Layout: d_inner = expand*d_model, H = d_inner/headdim heads, shared B/C
+(ngroups=1), depthwise causal conv (kernel 4) over [x, B, C].
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ckpt, maybe_scan
+from repro.models.common import (COMPUTE_DTYPE, cross_entropy, dense_init,
+                                 embed, init_embedding, prepend_layers_axis,
+                                 rms_norm, stack_init, unembed, zeros_init)
+from repro.sharding.rules import maybe_constrain
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_headdim
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N
+    return d_in, H, N, conv_dim
+
+
+def init_block(key, cfg):
+    d = cfg.d_model
+    d_in, H, N, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    p = dict(
+        ln=zeros_init((d,)),
+        in_proj=dense_init(ks[0], (d, d_in + conv_dim + H), d),
+        conv_w=dense_init(ks[1], (cfg.conv_kernel, conv_dim), cfg.conv_kernel),
+        conv_b=zeros_init((conv_dim,)),
+        A_log=jnp.zeros((H,), jnp.float32),
+        dt_bias=jnp.zeros((H,), jnp.float32),
+        D=jnp.ones((H,), jnp.float32),
+        norm=zeros_init((d_in,)),
+        out_proj=dense_init(ks[2], (d_in, d), d_in),
+    )
+    a = dict(
+        ln=("embed",),
+        in_proj=("embed", "ffn"),
+        conv_w=(None, "ffn"), conv_b=("ffn",),
+        A_log=("q_heads",), dt_bias=("q_heads",), D=("q_heads",),
+        norm=("ffn",),
+        out_proj=("ffn", "embed"),
+    )
+    return p, a
+
+
+def _segsum(x):
+    """x [..., T] -> lower-triangular pairwise cumulative sums [..., T, T]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dtA, B, C, chunk: int, init_state=None):
+    """SSD dual form.
+
+    x [b,l,h,p] (already dt-scaled), dtA [b,l,h], B/C [b,l,n].
+    Returns (y [b,l,h,p], final_state [b,h,p,n]).
+    """
+    b, l, h, pdim = x.shape
+    n = B.shape[-1]
+    c = l // chunk
+    xr = x.reshape(b, c, chunk, h, pdim)
+    Ar = dtA.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)  # [b,h,c,Q]
+    Br = B.reshape(b, c, chunk, n)
+    Cr = C.reshape(b, c, chunk, n)
+    A_cs = jnp.cumsum(Ar, axis=-1)
+
+    # 1) intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(Ar))                                   # [b,h,c,Q,Q]
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        Cr, Br, L.astype(jnp.float32), xr)
+
+    # 2) chunk-final states
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)              # [b,h,c,Q]
+    states = jnp.einsum("bcsn,bhcs,bcshp->bchpn", Br, decay_states, xr)
+
+    # 3) inter-chunk recurrence over chunk axis
+    if init_state is None:
+        init_state = jnp.zeros((b, h, pdim, n), states.dtype)
+    chunk_decay = jnp.exp(A_cs[..., -1])                       # [b,h,c]
+
+    def scan_fn(carry, inp):
+        s_c, d_c = inp                                         # [b,h,p,n], [b,h]
+        new = carry * d_c[..., None, None] + s_c
+        return new, carry  # emit state *entering* this chunk
+
+    final, prev_states = maybe_scan(
+        scan_fn, init_state,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # [b,c,h,p,n]
+
+    # 4) state -> output within chunk
+    state_decay = jnp.exp(A_cs)                                # [b,h,c,Q]
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cr, prev_states, state_decay)
+    y = (Y_diag + Y_off).reshape(b, l, h, pdim)
+    return y, final
+
+
+def block_forward(p, x, cfg, *, want_state: bool = False):
+    """x [B,T,d] -> (out, (conv_state, ssm_state) if want_state)."""
+    B_, T, d = x.shape
+    d_in, H, N, conv_dim = _dims(cfg)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("btd,de->bte", h, p["in_proj"].astype(COMPUTE_DTYPE))
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim:].astype(jnp.float32)
+
+    # depthwise causal conv
+    k = cfg.conv_kernel
+    xBC_pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(xBC_pad[:, i:i + T] * p["conv_w"][i].astype(COMPUTE_DTYPE)
+               for i in range(k)) + p["conv_b"].astype(COMPUTE_DTYPE)
+    xBC_c = jax.nn.silu(conv)
+
+    xs = xBC_c[..., :d_in].reshape(B_, T, H, cfg.ssm_headdim)
+    Bm = xBC_c[..., d_in:d_in + N].astype(jnp.float32)
+    Cm = xBC_c[..., d_in + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                   # [H]
+    x_dt = xs.astype(jnp.float32) * dt[..., None]
+    # pad T to a chunk multiple: zero inputs with dtA=0 (decay 1) are
+    # exact no-ops on the state and contribute nothing to y
+    chunk = min(cfg.ssm_chunk, T)
+    T_pad = -(-T // chunk) * chunk
+    if T_pad != T:
+        padt = [(0, 0), (0, T_pad - T)]
+        x_dt = jnp.pad(x_dt, padt + [(0, 0), (0, 0)])
+        dtA_p = jnp.pad(dt * A, padt + [(0, 0)])
+        Bm_p = jnp.pad(Bm, padt + [(0, 0)])
+        Cm_p = jnp.pad(Cm, padt + [(0, 0)])
+    else:
+        dtA_p, Bm_p, Cm_p = dt * A, Bm, Cm
+    y, final_state = ssd_chunked(x_dt, dtA_p, Bm_p, Cm_p, chunk)
+    y = y[:, :T]
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, T, d_in).astype(COMPUTE_DTYPE)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = x + jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(COMPUTE_DTYPE))
+    out = maybe_constrain(out, ("batch", "seq", "embed"))
+    if want_state:
+        conv_state = xBC_pad[:, -(k - 1):] if k > 1 else \
+            jnp.zeros((B_, 0, conv_dim), xBC.dtype)
+        return out, (conv_state, final_state)
+    return out, jnp.float32(0)
+
+
+def block_decode(p, x, cfg, cache):
+    """One-token recurrent update. cache = dict(conv, ssm, idx)."""
+    B_, _, d = x.shape
+    d_in, H, N, conv_dim = _dims(cfg)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("btd,de->bte", h, p["in_proj"].astype(COMPUTE_DTYPE))[:, 0]
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim:].astype(jnp.float32)
+
+    k = cfg.conv_kernel
+    hist = jnp.concatenate([cache["conv"], xBC[:, None]], axis=1)  # [B,k,cd]
+    conv = jnp.einsum("bkc,kc->bc", hist, p["conv_w"].astype(COMPUTE_DTYPE)) \
+        + p["conv_b"].astype(COMPUTE_DTYPE)
+    xBC_c = jax.nn.silu(conv)
+    new_conv = hist[:, 1:]
+
+    xs = xBC_c[..., :d_in].reshape(B_, H, cfg.ssm_headdim).astype(jnp.float32)
+    Bm = xBC_c[..., d_in:d_in + N].astype(jnp.float32)
+    Cm = xBC_c[..., d_in + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                    # [B,H]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                    # [B,H]
+    ssm = cache["ssm"] * decay[..., None, None] + \
+        (dt[..., None] * xs)[..., None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cm) + xs * p["D"][None, :, None]
+    y = y.reshape(B_, d_in).astype(COMPUTE_DTYPE)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = x + jnp.einsum("be,ed->bd", y,
+                         p["out_proj"].astype(COMPUTE_DTYPE))[:, None]
+    return out, dict(conv=new_conv, ssm=ssm, idx=cache["idx"] + 1)
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["embed"], a["embed"] = init_embedding(ks[0], cfg.vocab_size, cfg.d_model)
+    p["layers"], a["layers"] = stack_init(lambda k: init_block(k, cfg),
+                                          ks[1], cfg.num_layers)
+    p["final_norm"], a["final_norm"] = zeros_init((cfg.d_model,)), ("embed",)
+    if not cfg.tie_embeddings:
+        p["lm_head"], a["lm_head"] = init_embedding(ks[2], cfg.vocab_size,
+                                                    cfg.d_model)
+    return p, a
+
+
+def _logits(params, hidden, cfg):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(table, hidden)
+
+
+def loss_fn(params, batch, cfg, **_):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed(params["embed"], tokens)
+
+    def body(carry, lp):
+        h, aux = carry
+        f = ckpt(lambda q, hh: block_forward(q, hh, cfg))
+        h2, a2 = f(lp, h)
+        return (h2, aux + a2), None
+
+    (x, aux), _ = maybe_scan(body, (x, jnp.float32(0)), params["layers"])
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    ce = cross_entropy(_logits(params, hidden, cfg), labels)
+    return ce, dict(ce=ce, aux=aux)
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    d_in, H, N, conv_dim = _dims(cfg)
+    L, k = cfg.num_layers, cfg.conv_kernel
+    c = dict(
+        conv=jnp.zeros((L, batch, k - 1, conv_dim), COMPUTE_DTYPE),
+        ssm=jnp.zeros((L, batch, H, cfg.ssm_headdim, N), jnp.float32),
+        idx=jnp.zeros((L, batch), jnp.int32),
+    )
+    a = dict(conv=("layers", "batch", None, "ffn"),
+             ssm=("layers", "batch", "q_heads", None, "state"),
+             idx=("layers", "batch"))
+    return c, a
+
+
+def prefill(params, tokens, cfg, pad_cache_to=None, **_):
+    del pad_cache_to  # state-based cache: no sequence axis to grow
+    B_, T = tokens.shape
+    x = embed(params["embed"], tokens)
+
+    def body(h, lp):
+        h2, (conv_s, ssm_s) = block_forward(lp, h, cfg, want_state=True)
+        return h2, dict(conv=conv_s, ssm=ssm_s,
+                        idx=jnp.full((h.shape[0],), T, jnp.int32))
+
+    x, cache = maybe_scan(body, x, params["layers"])
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, hidden[:, -1:], cfg), cache
+
+
+def decode_step(params, cache, token, cfg):
+    x = embed(params["embed"], token)
+
+    def body(h, xs):
+        lp, c = xs
+        h2, c2 = block_decode(lp, h, cfg, c)
+        return h2, c2
+
+    x, new_cache = maybe_scan(body, x, (params["layers"], cache))
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, hidden, cfg), new_cache

@@ -1,0 +1,41 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / squared-ReLU / GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import COMPUTE_DTYPE, dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str):
+    gated = kind in ("swiglu", "geglu")
+    ks = jax.random.split(key, 3)
+    p = dict(w_up=dense_init(ks[0], (d_model, d_ff), d_model),
+             w_down=dense_init(ks[1], (d_ff, d_model), d_ff))
+    a = dict(w_up=("embed", "ffn"), w_down=("ffn", "embed"))
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), d_model)
+        a["w_gate"] = ("embed", "ffn")
+    return p, a
+
+
+def _act(h, kind: str):
+    if kind == "squared_relu":
+        r = jax.nn.relu(h)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(h)
+    raise ValueError(kind)
+
+
+def mlp_forward(p, x, kind: str):
+    up = jnp.einsum("btd,df->btf", x, p["w_up"].astype(COMPUTE_DTYPE))
+    if kind == "swiglu":
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(COMPUTE_DTYPE))
+        h = jax.nn.silu(g) * up
+    elif kind == "geglu":
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(COMPUTE_DTYPE))
+        h = jax.nn.gelu(g) * up
+    else:
+        h = _act(up, kind)
+    return jnp.einsum("btf,fd->btd", h, p["w_down"].astype(COMPUTE_DTYPE))

@@ -1,0 +1,26 @@
+"""Model registry: family -> module implementing the model API.
+
+API every family module provides:
+  init_params(cfg, key) -> (params, axes)
+  loss_fn(params, batch, cfg) -> (loss, metrics)
+  prefill(params, tokens, cfg, **extra) -> (logits, cache)
+  decode_step(params, cache, token, cfg) -> (logits, cache)
+  init_cache(cfg, batch, max_seq) -> (cache, axes)
+"""
+from __future__ import annotations
+
+from types import ModuleType
+
+from repro.models import encdec, mamba2, rglru, transformer, vlm
+
+
+def get_model(cfg) -> ModuleType:
+    if cfg.family == "ssm":
+        return mamba2
+    if cfg.family == "hybrid":
+        return rglru
+    if cfg.family == "audio":
+        return encdec
+    if cfg.family == "vlm":
+        return vlm
+    return transformer  # dense | moe

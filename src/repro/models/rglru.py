@@ -1,0 +1,343 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Block pattern (cfg.block_pattern, default 2:1): two recurrent blocks then one
+local (sliding-window) MQA attention block. 38 layers = 12 full groups + 2
+trailing recurrent blocks, kept in faithful order via two scans (grouped +
+trailing).
+
+RG-LRU (Griffin eq. 1-4):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = a^(c * r_t),  a = sigmoid(Lambda) (c = 8)
+    h_t = a_t . h_{t-1} + sqrt(1 - a_t^2) . (i_t . x_t)
+
+Train/prefill evaluate the linear recurrence with an associative scan
+(log-depth); decode is the O(1) update. The recurrent branch includes the
+Griffin temporal conv (kernel 4) and GeGLU output gating.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models.common import ckpt, maybe_scan
+from repro.models.common import (COMPUTE_DTYPE, cross_entropy, dense_init,
+                                 embed, init_embedding, prepend_layers_axis,
+                                 rms_norm, stack_init, unembed, zeros_init)
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.sharding.rules import maybe_constrain
+
+C_GATE = 8.0
+
+
+def _lru_width(cfg) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def init_recurrent_block(key, cfg):
+    d, w = cfg.d_model, _lru_width(cfg)
+    ks = jax.random.split(key, 7)
+    p = dict(
+        ln=zeros_init((d,)),
+        w_in=dense_init(ks[0], (d, w), d),       # recurrent branch input
+        w_gate_in=dense_init(ks[1], (d, w), d),  # multiplicative branch
+        conv_w=dense_init(ks[2], (cfg.conv_kernel, w), cfg.conv_kernel),
+        conv_b=zeros_init((w,)),
+        w_a=dense_init(ks[3], (w, w), w),
+        b_a=zeros_init((w,)),
+        w_x=dense_init(ks[4], (w, w), w),
+        b_x=zeros_init((w,)),
+        # Lambda init so a = sigmoid(Lambda) ~ U(0.9, 0.999)-ish
+        lam=jnp.asarray(jax.random.uniform(ks[5], (w,), jnp.float32,
+                                           2.2, 6.9)),
+        w_out=dense_init(ks[6], (w, d), w),
+        ln_mlp=zeros_init((d,)),
+    )
+    a = dict(ln=("embed",), w_in=("embed", "ffn"), w_gate_in=("embed", "ffn"),
+             conv_w=(None, "ffn"), conv_b=("ffn",),
+             w_a=("ffn", "ffn_in"), b_a=("ffn",),
+             w_x=("ffn", "ffn_in"), b_x=("ffn",),
+             lam=("ffn",), w_out=("ffn", "embed"), ln_mlp=("embed",))
+    mp, ma = init_mlp(jax.random.fold_in(key, 7), d, cfg.d_ff, cfg.mlp)
+    p["mlp"], a["mlp"] = mp, ma
+    return p, a
+
+
+def init_attn_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    ap, aa = attn_lib.init_gqa(k1, cfg)
+    mp, ma = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp)
+    p = dict(ln=zeros_init((cfg.d_model,)), attn=ap,
+             ln_mlp=zeros_init((cfg.d_model,)), mlp=mp)
+    a = dict(ln=("embed",), attn=aa, ln_mlp=("embed",), mlp=ma)
+    return p, a
+
+
+def _rglru_scan(x_gated, a_pow, h0=None):
+    """h_t = a_t * h_{t-1} + b_t via associative scan. Inputs fp32."""
+    b = jnp.sqrt(jnp.maximum(1.0 - a_pow * a_pow, 1e-12)) * x_gated
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    a_s, h = jax.lax.associative_scan(op, (a_pow, b), axis=1)
+    if h0 is not None:
+        # fold initial state: h_t += (prod a_{1..t}) * h0
+        h = h + a_s * h0[:, None]
+    return h
+
+
+def _recurrent_branch(p, xw, cfg, conv_hist=None, h0=None):
+    """xw [B,T,w] conv input. Returns (y, (new_conv_hist, h_last))."""
+    B_, T, w = xw.shape
+    k = cfg.conv_kernel
+    if conv_hist is None:
+        pad = jnp.zeros((B_, k - 1, w), xw.dtype)
+    else:
+        pad = conv_hist
+    xp = jnp.concatenate([pad, xw], axis=1)
+    conv = sum(xp[:, i:i + T] * p["conv_w"][i].astype(COMPUTE_DTYPE)
+               for i in range(k)) + p["conv_b"].astype(COMPUTE_DTYPE)
+    xc = conv.astype(jnp.float32)
+    r = jax.nn.sigmoid(xc @ p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xc @ p["w_x"].astype(jnp.float32) + p["b_x"].astype(jnp.float32))
+    log_a = -C_GATE * jax.nn.softplus(-p["lam"]) * r      # log a^(c*r)
+    a_pow = jnp.exp(log_a)
+    h = _rglru_scan(i * xc, a_pow, h0)
+    new_hist = xp[:, -(k - 1):] if k > 1 else jnp.zeros((B_, 0, w), xw.dtype)
+    return h.astype(COMPUTE_DTYPE), (new_hist, h[:, -1])
+
+
+def recurrent_block_forward(p, x, cfg, *, want_state: bool = False):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    xw = jnp.einsum("btd,dw->btw", h, p["w_in"].astype(COMPUTE_DTYPE))
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", h,
+                                  p["w_gate_in"].astype(COMPUTE_DTYPE)))
+    y, state = _recurrent_branch(p, xw, cfg)
+    y = y * gate
+    x = x + jnp.einsum("btw,wd->btd", y, p["w_out"].astype(COMPUTE_DTYPE))
+    x = maybe_constrain(x, ("batch", "seq", "embed"))
+    h2 = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    x = x + mlp_forward(p["mlp"], h2, cfg.mlp)
+    if want_state:
+        return x, state
+    return x, jnp.float32(0)
+
+
+def recurrent_block_decode(p, x, cfg, cache):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    xw = jnp.einsum("btd,dw->btw", h, p["w_in"].astype(COMPUTE_DTYPE))
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", h,
+                                  p["w_gate_in"].astype(COMPUTE_DTYPE)))
+    y, (new_hist, h_last) = _recurrent_branch(
+        p, xw, cfg, conv_hist=cache["conv"], h0=cache["h"])
+    y = y * gate
+    x = x + jnp.einsum("btw,wd->btd", y, p["w_out"].astype(COMPUTE_DTYPE))
+    h2 = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    x = x + mlp_forward(p["mlp"], h2, cfg.mlp)
+    return x, dict(conv=new_hist, h=h_last, idx=cache["idx"] + 1)
+
+
+def attn_block_forward(p, x, cfg, positions, *, want_kv: bool = False,
+                       q_chunk: int = 512):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    y = attn_lib.gqa_forward(p["attn"], h, cfg, positions, q_chunk=q_chunk)
+    x = x + y
+    h2 = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    x = x + mlp_forward(p["mlp"], h2, cfg.mlp)
+    if want_kv:
+        _, k, v = attn_lib._qkv(p["attn"], h, cfg,
+                                positions[None, :])
+        w = cfg.local_window
+        if k.shape[1] > w:
+            k, v = k[:, -w:], v[:, -w:]
+        return x, (k, v)
+    return x, jnp.float32(0)
+
+
+def attn_block_decode(p, x, cfg, cache):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    y, cache = attn_lib.gqa_decode(p["attn"], h, cfg, cache)
+    x = x + y
+    h2 = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    x = x + mlp_forward(p["mlp"], h2, cfg.mlp)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# model API: groups of (pattern) + trailing recurrent blocks
+# ---------------------------------------------------------------------------
+
+def _group_layout(cfg) -> Tuple[int, int]:
+    period = len(cfg.block_pattern)          # e.g. 3 = (rglru, rglru, local)
+    n_groups = cfg.num_layers // period
+    trailing = cfg.num_layers - n_groups * period  # trailing rglru blocks
+    return n_groups, trailing
+
+
+def _attn_cfg(cfg):
+    """Local-attention blocks use the sliding window."""
+    import dataclasses
+    return dataclasses.replace(cfg, sliding_window=cfg.local_window)
+
+
+def init_group(key, cfg):
+    """One pattern group: stacked recurrent blocks + one attention block."""
+    n_rec = sum(1 for b in cfg.block_pattern if b == "rglru")
+    k1, k2 = jax.random.split(key)
+    rp, ra = stack_init(lambda k: init_recurrent_block(k, cfg), k1, n_rec)
+    ap, aa = init_attn_block(k2, _attn_cfg(cfg))
+    return dict(rec=rp, attn=ap), dict(rec=ra, attn=aa)
+
+
+def init_params(cfg, key):
+    n_groups, trailing = _group_layout(cfg)
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["embed"], a["embed"] = init_embedding(ks[0], cfg.vocab_size, cfg.d_model)
+    p["groups"], a["groups"] = stack_init(lambda k: init_group(k, cfg),
+                                          ks[1], n_groups)
+    if trailing:
+        p["trailing"], a["trailing"] = stack_init(
+            lambda k: init_recurrent_block(k, cfg), ks[2], trailing)
+    p["final_norm"], a["final_norm"] = zeros_init((cfg.d_model,)), ("embed",)
+    if not cfg.tie_embeddings:
+        p["lm_head"], a["lm_head"] = init_embedding(ks[3], cfg.vocab_size,
+                                                    cfg.d_model)
+    return p, a
+
+
+def _group_forward(gp, x, cfg, positions, q_chunk=512):
+    def rec_body(h, lp):
+        f = ckpt(lambda q, hh: recurrent_block_forward(q, hh, cfg))
+        h2, _ = f(lp, h)
+        return h2, None
+
+    x, _ = maybe_scan(rec_body, x, gp["rec"])
+    f = ckpt(lambda q, hh: attn_block_forward(
+        q, hh, _attn_cfg(cfg), positions, q_chunk=q_chunk))
+    x, _ = f(gp["attn"], x)
+    return x
+
+
+def loss_fn(params, batch, cfg, *, q_chunk: int = 512, **_):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed(params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    def body(h, gp):
+        return _group_forward(gp, h, cfg, positions, q_chunk), None
+
+    x, _ = maybe_scan(body, x, params["groups"])
+    if "trailing" in params:
+        def tbody(h, lp):
+            f = ckpt(
+                lambda q, hh: recurrent_block_forward(q, hh, cfg))
+            h2, _ = f(lp, h)
+            return h2, None
+
+        x, _ = maybe_scan(tbody, x, params["trailing"])
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    ce = cross_entropy(unembed(table, hidden), labels)
+    return ce, dict(ce=ce, aux=jnp.float32(0))
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    n_groups, trailing = _group_layout(cfg)
+    w = _lru_width(cfg)
+    n_rec = sum(1 for b in cfg.block_pattern if b == "rglru")
+    k = cfg.conv_kernel
+    attn_c, attn_ax = attn_lib.init_gqa_cache(_attn_cfg(cfg), batch, max_seq)
+    rec_c = dict(conv=jnp.zeros((batch, k - 1, w), COMPUTE_DTYPE),
+                 h=jnp.zeros((batch, w), jnp.float32),
+                 idx=jnp.zeros((batch,), jnp.int32))
+    rec_ax = dict(conv=("batch", None, "ffn"), h=("batch", "ffn"),
+                  idx=("batch",))
+
+    def stack(c, n):
+        return jax.tree_util.tree_map(
+            lambda v: jnp.broadcast_to(v, (n,) + v.shape).copy(), c)
+
+    cache = dict(groups=dict(rec=stack(stack(rec_c, n_rec), n_groups),
+                             attn=stack(attn_c, n_groups)))
+    axes = dict(groups=dict(
+        rec=prepend_layers_axis(prepend_layers_axis(rec_ax)),
+        attn=prepend_layers_axis(attn_ax)))
+    if trailing:
+        cache["trailing"] = stack(rec_c, trailing)
+        axes["trailing"] = prepend_layers_axis(rec_ax)
+    return cache, axes
+
+
+def prefill(params, tokens, cfg, *, q_chunk: int = 512,
+            pad_cache_to=None, **_):
+    B_, T = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = jnp.arange(T, dtype=jnp.int32)
+    idxT = jnp.full((B_,), T, jnp.int32)
+
+    def group_body(h, gp):
+        def rec_body(hh, lp):
+            h2, (conv_s, h_last) = recurrent_block_forward(
+                lp, hh, cfg, want_state=True)
+            return h2, dict(conv=conv_s, h=h_last, idx=idxT)
+
+        h, rec_cache = maybe_scan(rec_body, h, gp["rec"])
+        h, (kc, vc) = attn_block_forward(gp["attn"], h, _attn_cfg(cfg),
+                                         positions, want_kv=True,
+                                         q_chunk=q_chunk)
+        return h, dict(rec=rec_cache, attn=dict(k=kc, v=vc, idx=idxT))
+
+    x, gcache = maybe_scan(group_body, x, params["groups"])
+    if pad_cache_to:
+        gcache = dict(gcache, attn=attn_lib.pad_stacked_cache(
+            gcache["attn"], pad_cache_to, _attn_cfg(cfg), T))
+    cache = dict(groups=gcache)
+    if "trailing" in params:
+        def tbody(hh, lp):
+            h2, (conv_s, h_last) = recurrent_block_forward(
+                lp, hh, cfg, want_state=True)
+            return h2, dict(conv=conv_s, h=h_last, idx=idxT)
+
+        x, cache["trailing"] = maybe_scan(tbody, x, params["trailing"])
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(table, hidden[:, -1:]), cache
+
+
+def decode_step(params, cache, token, cfg):
+    x = embed(params["embed"], token)
+
+    def group_body(h, xs):
+        gp, gc = xs
+
+        def rec_body(hh, rxs):
+            lp, rc = rxs
+            h2, rc2 = recurrent_block_decode(lp, hh, cfg, rc)
+            return h2, rc2
+
+        h, rec_c = maybe_scan(rec_body, h, (gp["rec"], gc["rec"]))
+        h, attn_c = attn_block_decode(gp["attn"], h, _attn_cfg(cfg),
+                                      gc["attn"])
+        return h, dict(rec=rec_c, attn=attn_c)
+
+    x, gcache = maybe_scan(group_body, x, (params["groups"],
+                                             cache["groups"]))
+    new_cache = dict(groups=gcache)
+    if "trailing" in params:
+        def tbody(hh, xs):
+            lp, rc = xs
+            h2, rc2 = recurrent_block_decode(lp, hh, cfg, rc)
+            return h2, rc2
+
+        x, new_cache["trailing"] = maybe_scan(
+            tbody, x, (params["trailing"], cache["trailing"]))
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(table, hidden), new_cache

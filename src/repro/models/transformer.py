@@ -1,0 +1,270 @@
+"""Decoder-only transformer LM (dense + MoE), scan-over-layers.
+
+Layer params are stacked on a leading "layers" axis and consumed by
+`lax.scan` (O(1) compile time in depth) with full per-layer remat for
+training. MoE architectures with leading dense layers (DeepSeek-V2) keep two
+stacks: `dense_layers` then `moe_layers`, preserving layer order.
+
+Exports (used by registry/launch):
+  init_params(cfg, key)          -> (params, axes)
+  loss_fn(params, batch, cfg)    -> (loss, metrics)     [train_step target]
+  prefill(params, tokens, cfg)   -> (logits_last, cache)
+  decode_step(params, cache, token, cfg) -> (logits, cache)
+  init_cache(cfg, batch, max_seq) -> (cache, axes)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models.common import ckpt, maybe_scan
+from repro.models.common import (COMPUTE_DTYPE, cross_entropy, dense_init,
+                                 embed, init_embedding, prepend_layers_axis,
+                                 rms_norm, stack_init, unembed, zeros_init)
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.models.moe import init_moe, moe_forward
+from repro.sharding.rules import maybe_constrain
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg):
+    if cfg.attention == "mla":
+        return attn_lib.init_mla(key, cfg)
+    return attn_lib.init_gqa(key, cfg)
+
+
+def init_block(key, cfg, *, moe: bool):
+    k1, k2 = jax.random.split(key)
+    ap, aa = _init_attn(k1, cfg)
+    p = dict(ln1=zeros_init((cfg.d_model,)), attn=ap,
+             ln2=zeros_init((cfg.d_model,)))
+    a = dict(ln1=("embed",), attn=aa, ln2=("embed",))
+    if moe:
+        mp, ma = init_moe(k2, cfg)
+        p["moe"], a["moe"] = mp, ma
+    else:
+        mp, ma = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp)
+        p["mlp"], a["mlp"] = mp, ma
+    return p, a
+
+
+def block_forward(p, x, cfg, positions, *, moe: bool, q_chunk: int = 512):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        h = attn_lib.mla_forward(p["attn"], h, cfg, positions, q_chunk=q_chunk)
+    else:
+        h = attn_lib.gqa_forward(p["attn"], h, cfg, positions, q_chunk=q_chunk)
+    x = x + h
+    x = maybe_constrain(x, ("batch", "seq", "embed"))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if moe:
+        h, aux = moe_forward(p["moe"], h, cfg)
+    else:
+        h, aux = mlp_forward(p["mlp"], h, cfg.mlp), jnp.float32(0)
+    x = x + h
+    return maybe_constrain(x, ("batch", "seq", "embed")), aux
+
+
+def block_decode(p, x, cfg, cache, *, moe: bool):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        h, cache = attn_lib.mla_decode(p["attn"], h, cfg, cache)
+    else:
+        h, cache = attn_lib.gqa_decode(p["attn"], h, cfg, cache)
+    x = x + h
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if moe:
+        h, _ = moe_forward(p["moe"], h, cfg)
+    else:
+        h = mlp_forward(p["mlp"], h, cfg.mlp)
+    return x + h, cache
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def _layer_split(cfg) -> Tuple[int, int]:
+    """(n_dense_layers, n_moe_layers)."""
+    if cfg.num_experts:
+        return cfg.first_dense_layers, cfg.num_layers - cfg.first_dense_layers
+    return cfg.num_layers, 0
+
+
+def init_params(cfg, key):
+    n_dense, n_moe = _layer_split(cfg)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    p["embed"], a["embed"] = init_embedding(ks[0], cfg.vocab_size, cfg.d_model)
+    if n_dense:
+        p["dense_layers"], a["dense_layers"] = stack_init(
+            lambda k: init_block(k, cfg, moe=False), ks[1], n_dense)
+    if n_moe:
+        p["moe_layers"], a["moe_layers"] = stack_init(
+            lambda k: init_block(k, cfg, moe=True), ks[2], n_moe)
+    p["final_norm"] = zeros_init((cfg.d_model,))
+    a["final_norm"] = ("embed",)
+    if not cfg.tie_embeddings:
+        p["lm_head"], a["lm_head"] = init_embedding(ks[3], cfg.vocab_size,
+                                                    cfg.d_model)
+    return p, a
+
+
+def _scan_stack(layers_params, x, fn, *, remat: bool):
+    f = ckpt(fn) if remat else fn
+
+    def body(carry, lp):
+        x, aux = carry
+        x2, a = f(lp, x)
+        return (x2, aux + a), None
+
+    (x, aux), _ = maybe_scan(body, (x, jnp.float32(0)), layers_params)
+    return x, aux
+
+
+def forward_hidden(params, x, cfg, positions, *, remat: bool = True,
+                   q_chunk: int = 512):
+    """x: [B, T, d] input embeddings -> (hidden [B,T,d], aux_loss)."""
+    aux_total = jnp.float32(0)
+    if "dense_layers" in params:
+        x, aux = _scan_stack(
+            params["dense_layers"], x,
+            lambda lp, h: block_forward(lp, h, cfg, positions, moe=False,
+                                        q_chunk=q_chunk),
+            remat=remat)
+        aux_total += aux
+    if "moe_layers" in params:
+        x, aux = _scan_stack(
+            params["moe_layers"], x,
+            lambda lp, h: block_forward(lp, h, cfg, positions, moe=True,
+                                        q_chunk=q_chunk),
+            remat=remat)
+        aux_total += aux
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux_total
+
+
+def logits_fn(params, hidden, cfg):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(table, hidden)
+
+
+def loss_fn(params, batch, cfg, *, aux_coef: float = 0.01,
+            q_chunk: int = 512):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed(params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    hidden, aux = forward_hidden(params, x, cfg, positions, q_chunk=q_chunk)
+    logits = logits_fn(params, hidden, cfg)
+    ce = cross_entropy(logits, labels)
+    return ce + aux_coef * aux, dict(ce=ce, aux=aux)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int):
+    n_dense, n_moe = _layer_split(cfg)
+    if cfg.attention == "mla":
+        c1, ax = attn_lib.init_mla_cache(cfg, batch, max_seq)
+    else:
+        c1, ax = attn_lib.init_gqa_cache(cfg, batch, max_seq)
+
+    def stack(c, n):
+        return jax.tree_util.tree_map(
+            lambda v: jnp.broadcast_to(v, (n,) + v.shape).copy(), c)
+
+    cache = {}
+    axes = {}
+    if n_dense:
+        cache["dense"] = stack(c1, n_dense)
+        axes["dense"] = prepend_layers_axis(ax)
+    if n_moe:
+        cache["moe"] = stack(c1, n_moe)
+        axes["moe"] = prepend_layers_axis(ax)
+    return cache, axes
+
+
+def prefill(params, tokens, cfg, *, q_chunk: int = 512,
+            pad_cache_to: Optional[int] = None):
+    """Full-sequence forward; returns last-position logits + filled cache.
+
+    The cache is rebuilt from the layer K/V projections — implemented as a
+    second lightweight pass per layer inside the same scan (XLA CSEs the
+    shared projections). `pad_cache_to` grows the cache to decode capacity."""
+    B, T = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = jnp.arange(T, dtype=jnp.int32)
+
+    caches = {}
+
+    def make_fn(moe_flag):
+        def fn(lp, h):
+            out, aux = block_forward(lp, h, cfg, positions, moe=moe_flag,
+                                     q_chunk=q_chunk)
+            # cache contents: recompute K/V (or latents) at full seq
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            if cfg.attention == "mla":
+                c_kv, k_rope = attn_lib._mla_kv_latent(
+                    lp["attn"], hn, cfg, positions[None, :])
+                c = dict(c_kv=c_kv, k_rope=k_rope,
+                         idx=jnp.full((hn.shape[0],), T, jnp.int32))
+            else:
+                _, k, v = attn_lib._qkv(lp["attn"], hn, cfg, positions[None, :])
+                if cfg.sliding_window and cfg.sliding_window < T:
+                    k = k[:, -cfg.sliding_window:]
+                    v = v[:, -cfg.sliding_window:]
+                c = dict(k=k, v=v, idx=jnp.full((k.shape[0],), T, jnp.int32))
+            return out, (aux, c)
+        return fn
+
+    def scan_fill(stack_params, x, moe_flag):
+        fn = make_fn(moe_flag)
+
+        def body(h, lp):
+            h2, (aux, c) = fn(lp, h)
+            return h2, c
+
+        return maybe_scan(body, x, stack_params)
+
+    if "dense_layers" in params:
+        x, caches["dense"] = scan_fill(params["dense_layers"], x, False)
+    if "moe_layers" in params:
+        x, caches["moe"] = scan_fill(params["moe_layers"], x, True)
+    if pad_cache_to:
+        caches = {k: attn_lib.pad_stacked_cache(c, pad_cache_to, cfg, T)
+                  for k, c in caches.items()}
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, hidden[:, -1:], cfg)
+    return logits, caches
+
+
+def decode_step(params, cache, token, cfg):
+    """token [B,1] int32 -> (logits [B,1,V], new cache)."""
+    x = embed(params["embed"], token)
+
+    def scan_dec(stack_params, stack_cache, x, moe_flag):
+        def body(h, xs):
+            lp, c = xs
+            h2, c2 = block_decode(lp, h, cfg, c, moe=moe_flag)
+            return h2, c2
+
+        return maybe_scan(body, x, (stack_params, stack_cache))
+
+    new_cache = {}
+    if "dense_layers" in params:
+        x, new_cache["dense"] = scan_dec(params["dense_layers"],
+                                         cache["dense"], x, False)
+    if "moe_layers" in params:
+        x, new_cache["moe"] = scan_dec(params["moe_layers"],
+                                       cache["moe"], x, True)
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_fn(params, hidden, cfg), new_cache

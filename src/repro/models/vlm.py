@@ -1,0 +1,93 @@
+"""InternVL2-style VLM backbone (text decoder + stub vision frontend).
+
+Per the assignment the InternViT frontend is a STUB: `input_specs()`
+provides precomputed patch embeddings [B, num_image_tokens, d_model] which
+are projected and prepended to the text embeddings. The LM backbone is the
+standard decoder-only transformer (Qwen2-0.5B-family config); loss is
+computed on text positions only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.common import maybe_scan
+from repro.models.common import (COMPUTE_DTYPE, cross_entropy, dense_init,
+                                 embed, rms_norm)
+
+
+def init_params(cfg, key):
+    k1, k2 = jax.random.split(key)
+    p, a = tf.init_params(cfg, k1)
+    # mlp projector from (stub) vision embedding space into the LM stream
+    p["vision_proj"] = dense_init(k2, (cfg.d_model, cfg.d_model), cfg.d_model)
+    a["vision_proj"] = ("embed", "embed_in")
+    return p, a
+
+
+def _prefix_inputs(params, batch, cfg):
+    tokens = batch["tokens"]
+    img = batch["img_embeds"].astype(COMPUTE_DTYPE)
+    img = jnp.einsum("bnd,de->bne", img,
+                     params["vision_proj"].astype(COMPUTE_DTYPE))
+    x_txt = embed(params["embed"], tokens)
+    return jnp.concatenate([img, x_txt], axis=1)
+
+
+def loss_fn(params, batch, cfg, *, q_chunk: int = 512, **_):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = _prefix_inputs(params, batch, cfg)
+    T_total = x.shape[1]
+    n_img = T_total - tokens.shape[1]
+    positions = jnp.arange(T_total, dtype=jnp.int32)
+    hidden, aux = tf.forward_hidden(params, x, cfg, positions,
+                                    q_chunk=q_chunk)
+    logits = tf.logits_fn(params, hidden[:, n_img:], cfg)
+    ce = cross_entropy(logits, labels)
+    return ce + 0.01 * aux, dict(ce=ce, aux=aux)
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    # cache covers image prefix + text
+    return tf.init_cache(cfg, batch, max_seq)
+
+
+def prefill(params, tokens, cfg, *, img_embeds=None, q_chunk: int = 512,
+            pad_cache_to=None, **_):
+    """Image prefix + prompt prefill. Returns cache over the full prefix."""
+    B_ = tokens.shape[0]
+    if img_embeds is None:
+        img_embeds = jnp.zeros((B_, cfg.num_image_tokens, cfg.d_model),
+                               COMPUTE_DTYPE)
+    x = _prefix_inputs(params, dict(tokens=tokens, img_embeds=img_embeds), cfg)
+    T = x.shape[1]
+    positions = jnp.arange(T, dtype=jnp.int32)
+    idxT = jnp.full((B_,), T, jnp.int32)
+    caches = {}
+
+    def scan_fill(stack_params, h, moe_flag):
+        def body(hh, lp):
+            h2, _ = tf.block_forward(lp, hh, cfg, positions, moe=moe_flag,
+                                     q_chunk=q_chunk)
+            hn = rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            from repro.models import attention as attn_lib
+            _, k, v = attn_lib._qkv(lp["attn"], hn, cfg, positions[None, :])
+            return h2, dict(k=k, v=v, idx=idxT)
+
+        return maybe_scan(body, h, stack_params)
+
+    if "dense_layers" in params:
+        x, caches["dense"] = scan_fill(params["dense_layers"], x, False)
+    if "moe_layers" in params:
+        x, caches["moe"] = scan_fill(params["moe_layers"], x, True)
+    if pad_cache_to:
+        from repro.models import attention as attn_lib
+        caches = {k: attn_lib.pad_stacked_cache(c, pad_cache_to, cfg, T)
+                  for k, c in caches.items()}
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return tf.logits_fn(params, hidden[:, -1:], cfg), caches
+
+
+def decode_step(params, cache, token, cfg):
+    return tf.decode_step(params, cache, token, cfg)

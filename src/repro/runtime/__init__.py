@@ -1,0 +1,6 @@
+from repro.runtime.fault_tolerance import (FailureSchedule, Heartbeat,
+                                           SimulatedFailure, Supervisor,
+                                           SupervisorResult)
+
+__all__ = ["FailureSchedule", "Heartbeat", "SimulatedFailure", "Supervisor",
+           "SupervisorResult"]

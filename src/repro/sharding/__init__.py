@@ -1,0 +1,4 @@
+from repro.sharding.rules import (ShardingRules, active_rules, default_rules,
+                                  maybe_constrain)
+
+__all__ = ["ShardingRules", "active_rules", "default_rules", "maybe_constrain"]

@@ -1,0 +1,8 @@
+from repro.train.optimizer import (AdamState, AdamWConfig, apply_updates,
+                                   init_state, state_axes)
+from repro.train.train_step import make_train_step
+from repro.train.compression import compressed_psum, compression_error
+
+__all__ = ["AdamState", "AdamWConfig", "apply_updates", "init_state",
+           "state_axes", "make_train_step", "compressed_psum",
+           "compression_error"]

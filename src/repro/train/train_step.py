@@ -1,0 +1,77 @@
+"""Training step factory: microbatched grad accumulation + AdamW/ZeRO.
+
+`make_train_step(cfg, model, adam_cfg, num_microbatches)` returns a pure
+function
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+with the global batch split into `num_microbatches` scanned microbatches
+(fp32 gradient accumulator, full per-layer remat inside the model), then a
+single optimizer application. Collective structure under pjit:
+  * per-microbatch DP gradient all-reduce is deferred — the accumulator is
+    sharded like the (TP-sharded) params, so XLA reduces once;
+  * ZeRO: gradient reduce-scatter into the data-sharded optimizer state and
+    the weight all-gather back to bf16 params (see optimizer.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import maybe_scan
+
+from repro.train.optimizer import AdamWConfig, AdamState, apply_updates
+from repro.sharding.rules import maybe_constrain
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int):
+    """[B, ...] -> [n, B/n, ...] per leaf."""
+    def sp(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return jax.tree_util.tree_map(sp, batch)
+
+
+def make_train_step(cfg, model, adam_cfg: AdamWConfig,
+                    num_microbatches: int = 1,
+                    loss_kwargs: Optional[dict] = None) -> Callable:
+    loss_kwargs = loss_kwargs or {}
+
+    def loss_for_grad(params, micro):
+        loss, metrics = model.loss_fn(params, micro, cfg, **loss_kwargs)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for_grad, has_aux=True)
+
+    def train_step(params, opt_state: AdamState, batch):
+        if num_microbatches > 1:
+            micro = _split_microbatches(batch, num_microbatches)
+
+            def acc_body(carry, mb):
+                g_acc, loss_acc = carry
+                mb = jax.tree_util.tree_map(
+                    lambda x: maybe_constrain(x, ("batch",) + (None,) * (x.ndim - 1)),
+                    mb)
+                (loss, _), grads = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, loss_acc + loss), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = maybe_scan(
+                acc_body, (g0, jnp.float32(0)), micro)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / num_microbatches, grads)
+            loss = loss_sum / num_microbatches
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+
+        new_params, new_opt, om = apply_updates(params, grads, opt_state,
+                                                adam_cfg)
+        metrics = dict(loss=loss, **om)
+        return new_params, new_opt, metrics
+
+    return train_step

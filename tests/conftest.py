@@ -1,0 +1,20 @@
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def small_graphs():
+    from repro.graphs import barabasi_albert, erdos_renyi, grid2d, ring
+    return {
+        "ring": ring(64),
+        "grid": grid2d(8, 8),
+        "er": erdos_renyi(96, 5.0, seed=1),
+        "ba": barabasi_albert(96, 3, seed=2),
+    }

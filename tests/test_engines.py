@@ -1,0 +1,85 @@
+"""Engine equivalence + CONGEST accounting (Lemma 1 / Theorem 1)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine_counts, engine_walks
+from repro.core.accounting import default_bandwidth
+from repro.core.graph import padded_adjacency
+from repro.core.simple_pagerank import simple_pagerank
+from repro.graphs import erdos_renyi, ring
+
+EPS = 0.25
+
+
+def test_multinomial_split_exact():
+    """Conditional-binomial chain conserves mass and never leaks."""
+    g = erdos_renyi(64, 6.0, seed=0)
+    nbr, _ = padded_adjacency(g)
+    surv = jax.random.randint(jax.random.PRNGKey(1), (g.n,), 0, 50)
+    surv = jnp.where(g.out_deg > 0, surv, 0)
+    T, rem = engine_counts._multinomial_split(
+        jax.random.PRNGKey(2), surv, g.out_deg, int(nbr.shape[1]))
+    assert int(rem.sum()) == 0
+    np.testing.assert_array_equal(np.asarray(T.sum(axis=1)), np.asarray(surv))
+    # nothing lands on padded slots
+    valid = np.zeros_like(np.asarray(T), dtype=bool)
+    deg = np.asarray(g.out_deg)
+    for v in range(g.n):
+        valid[v, :deg[v]] = True
+    assert (np.asarray(T)[~valid] == 0).all()
+
+
+def test_engines_agree_in_distribution(small_graphs):
+    """Count engine (faithful Alg 1) and walk engine estimate the same pi."""
+    g = small_graphs["er"]
+    K = 120
+    r_counts = simple_pagerank(g, EPS, walks_per_node=K,
+                               key=jax.random.PRNGKey(3), engine="counts")
+    r_walks = simple_pagerank(g, EPS, walks_per_node=K,
+                              key=jax.random.PRNGKey(4), engine="walks")
+    a = np.asarray(r_counts.pi) / np.asarray(r_counts.pi).sum()
+    b = np.asarray(r_walks.pi) / np.asarray(r_walks.pi).sum()
+    assert np.abs(a - b).sum() < 0.15  # two MC estimates of the same vector
+
+
+def test_rounds_scale_with_inverse_eps():
+    """Theorem 1: O(log n / eps) — halving eps ~doubles rounds."""
+    g = ring(64)
+    r1 = simple_pagerank(g, 0.4, walks_per_node=100, key=jax.random.PRNGKey(5))
+    r2 = simple_pagerank(g, 0.1, walks_per_node=100, key=jax.random.PRNGKey(5))
+    assert r2.logical_rounds > 2 * r1.logical_rounds
+
+
+def test_congestion_stays_polylog(small_graphs):
+    """Lemma 1: per-edge bits stay ~log(walks), even with many walks."""
+    g = small_graphs["er"]
+    for K in (10, 100, 1000):
+        res = simple_pagerank(g, EPS, walks_per_node=K,
+                              key=jax.random.PRNGKey(7), traced=True)
+        bits = res.report.max_bits_per_edge_per_round
+        # count messages encode values <= total walks: O(log(nK)) bits
+        assert bits <= math.ceil(math.log2(g.n * K + 1)) + 8
+    # 100x more walks costs only ~log-factor more bits (counts, not IDs)
+    assert bits <= 3 * default_bandwidth(g.n)
+
+
+def test_walk_engine_traced_matches_jit(small_graphs):
+    g = small_graphs["ring"]
+    key = jax.random.PRNGKey(9)
+    s1 = engine_walks.run(g, EPS, 50, key)
+    s2, traces = engine_walks.run_traced(g, EPS, 50, key)
+    np.testing.assert_array_equal(np.asarray(s1.zeta), np.asarray(s2.zeta))
+    assert int(s1.round) == len(traces)
+
+
+def test_zeta_conservation(small_graphs):
+    """sum(zeta) == starts + total moves (every arrival counted once)."""
+    g = small_graphs["grid"]
+    K = 60
+    state, traces = engine_walks.run_traced(g, EPS, K, jax.random.PRNGKey(11))
+    total_moves = sum(t.total_count for t in traces)
+    assert int(state.zeta.sum()) == g.n * K + total_moves

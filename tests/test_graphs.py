@@ -1,0 +1,64 @@
+"""Graph substrate: CSR validity, generator invariants."""
+import numpy as np
+import pytest
+
+from repro.core.graph import CSRGraph, from_edges, padded_adjacency
+from repro.graphs import (barabasi_albert, directed_web, erdos_renyi, grid2d,
+                          random_regular, ring)
+
+
+def _check_csr(g: CSRGraph):
+    rp = np.asarray(g.row_ptr)
+    col = np.asarray(g.col_idx)
+    deg = np.asarray(g.out_deg)
+    assert rp.shape == (g.n + 1,)
+    assert rp[0] == 0 and rp[-1] == g.m
+    assert (np.diff(rp) == deg).all()
+    assert col.shape == (g.m,)
+    if g.m:
+        assert col.min() >= 0 and col.max() < g.n
+
+
+@pytest.mark.parametrize("maker", [
+    lambda: ring(33), lambda: grid2d(5, 7),
+    lambda: erdos_renyi(50, 4.0, seed=1),
+    lambda: barabasi_albert(50, 3, seed=1),
+    lambda: random_regular(40, 4, seed=1),
+    lambda: directed_web(60, 5.0, seed=1),
+])
+def test_generators_valid_csr(maker):
+    g = maker()
+    _check_csr(g)
+
+
+def test_undirected_symmetry():
+    g = erdos_renyi(40, 4.0, seed=2)
+    rp = np.asarray(g.row_ptr)
+    col = np.asarray(g.col_idx)
+    edges = set()
+    for v in range(g.n):
+        for u in col[rp[v]:rp[v + 1]]:
+            edges.add((v, int(u)))
+    assert all((u, v) in edges for (v, u) in edges)
+
+
+def test_directed_no_dangling():
+    g = directed_web(80, 5.0, seed=3)
+    assert (np.asarray(g.out_deg) > 0).all()
+
+
+def test_padded_adjacency_roundtrip():
+    g = erdos_renyi(30, 4.0, seed=4)
+    nbr, valid = padded_adjacency(g)
+    rp = np.asarray(g.row_ptr)
+    col = np.asarray(g.col_idx)
+    for v in range(g.n):
+        d = rp[v + 1] - rp[v]
+        assert (np.asarray(nbr)[v, :d] == col[rp[v]:rp[v + 1]]).all()
+        assert np.asarray(valid)[v, :d].all()
+        assert not np.asarray(valid)[v, d:].any()
+
+
+def test_from_edges_dedup():
+    g = from_edges(np.array([0, 0, 1]), np.array([1, 1, 2]), 3)
+    assert g.m == 2

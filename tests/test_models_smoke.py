@@ -1,0 +1,128 @@
+"""Per-arch reduced-config smoke: forward + one train step on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, input_specs, reduced_config
+from repro.models import get_model
+from repro.train import AdamWConfig, init_state, make_train_step
+
+
+def _batch(cfg, B=2, T=16):
+    b = dict(tokens=jnp.ones((B, T), jnp.int32),
+             labels=jnp.ones((B, T), jnp.int32))
+    if cfg.family == "audio":
+        b["frames"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model),
+                                jnp.bfloat16)
+    if cfg.family == "vlm":
+        b["img_embeds"] = jnp.zeros((B, cfg.num_image_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_and_train_step(arch, key):
+    cfg = reduced_config(arch)
+    model = get_model(cfg)
+    params, axes = model.init_params(cfg, key)
+    # params/axes trees line up
+    assert (jax.tree_util.tree_structure(params)
+            == jax.tree_util.tree_structure(
+                axes, is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x)))
+    batch = _batch(cfg)
+    loss, metrics = model.loss_fn(params, batch, cfg, q_chunk=8)
+    assert jnp.isfinite(loss), arch
+    # one optimizer step on the same batch must reduce the loss
+    adam = AdamWConfig(lr=1e-2)
+    opt = init_state(params, adam)
+    step = make_train_step(cfg, model, adam, loss_kwargs=dict(q_chunk=8))
+    p2, opt, m = step(params, opt, batch)
+    loss2, _ = model.loss_fn(p2, batch, cfg, q_chunk=8)
+    assert jnp.isfinite(m["grad_norm"])
+    assert float(loss2) < float(loss), (arch, float(loss), float(loss2))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_microbatched_grads_match_full(arch, key):
+    """Gradient accumulation over microbatches == single-batch gradients."""
+    cfg = reduced_config(arch)
+    model = get_model(cfg)
+    params, _ = model.init_params(cfg, key)
+    batch = _batch(cfg, B=4, T=8)
+
+    def loss_of(p, b):
+        return model.loss_fn(p, b, cfg, q_chunk=8)[0]
+
+    g_full = jax.grad(loss_of)(params, batch)
+    halves = jax.tree_util.tree_map(
+        lambda x: x.reshape((2, 2) + x.shape[1:]), batch)
+    g_half0 = jax.grad(loss_of)(params, jax.tree_util.tree_map(
+        lambda x: x[0], halves))
+    g_half1 = jax.grad(loss_of)(params, jax.tree_util.tree_map(
+        lambda x: x[1], halves))
+    g_acc = jax.tree_util.tree_map(lambda a, b: (a + b) / 2, g_half0, g_half1)
+    flat_a = jnp.concatenate([x.astype(jnp.float32).reshape(-1)
+                              for x in jax.tree_util.tree_leaves(g_full)])
+    flat_b = jnp.concatenate([x.astype(jnp.float32).reshape(-1)
+                              for x in jax.tree_util.tree_leaves(g_acc)])
+    # bf16 params: accumulate order differs; require close, not equal
+    denom = jnp.maximum(jnp.abs(flat_a).max(), 1e-6)
+    assert float(jnp.abs(flat_a - flat_b).max() / denom) < 0.08
+
+
+def test_param_counts_match_configs():
+    """Analytic param_count ~ actual leaf count on reduced configs (<12%)."""
+    for arch in ARCHS:
+        cfg = reduced_config(arch)
+        if cfg.family in ("hybrid", "audio"):
+            continue  # analytic formula covers LM stacks only
+        model = get_model(cfg)
+        params, _ = model.init_params(cfg, jax.random.PRNGKey(0))
+        actual = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        est = cfg.param_count()
+        assert abs(actual - est) / actual < 0.12, (arch, actual, est)
+
+
+def test_full_config_param_counts():
+    """Sanity-check the headline parameter counts of the full configs."""
+    expect = {
+        "deepseek-v2-236b": (200e9, 280e9),
+        "dbrx-132b": (115e9, 150e9),
+        "qwen2-7b": (6e9, 9e9),
+        "nemotron-4-340b": (300e9, 380e9),
+        "qwen3-32b": (28e9, 38e9),
+        "mamba2-1.3b": (1.0e9, 1.6e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+
+
+def test_long_500k_applicability():
+    from repro.configs import shape_applicable
+    runs = {a for a in ARCHS
+            if shape_applicable(get_config(a), SHAPES["long_500k"])}
+    assert runs == {"h2o-danube-3-4b", "mamba2-1.3b", "recurrentgemma-9b"}
+
+
+def test_padded_heads_exact(key):
+    """TP head padding (28->32 style) is mathematically exact: identical
+    loss and exactly-zero gradients on the padded slots."""
+    import dataclasses
+    import jax.tree_util as tu
+    cfg = dataclasses.replace(reduced_config("qwen2-7b"), num_heads=3,
+                              num_kv_heads=1, head_dim=16)
+    cfgp = dataclasses.replace(cfg, pad_q_heads_to=4)
+    model = get_model(cfgp)
+    params, _ = model.init_params(cfgp, key)
+    batch = dict(tokens=jax.random.randint(key, (2, 16), 0, cfg.vocab_size),
+                 labels=jax.random.randint(key, (2, 16), 0, cfg.vocab_size))
+    g = jax.grad(lambda p: model.loss_fn(p, batch, cfgp, q_chunk=8)[0])(params)
+    for path, leaf in tu.tree_flatten_with_path(g)[0]:
+        sp = str(path)
+        if sp.endswith("'wq']") and leaf.ndim == 4:
+            assert float(jnp.abs(leaf[:, :, 3:]).max()) == 0.0
+        if sp.endswith("'wo']") and leaf.ndim == 4:
+            assert float(jnp.abs(leaf[:, 3:]).max()) == 0.0

@@ -1,0 +1,88 @@
+"""End-to-end correctness of the paper's algorithms vs classical baselines."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (directed_local_pagerank, exact_pagerank,
+                        improved_pagerank, l1_error, normalized,
+                        power_iteration, simple_pagerank, topk_overlap,
+                        walks_per_node_for)
+from repro.graphs import directed_web, erdos_renyi
+
+EPS = 0.2
+
+
+def test_power_iteration_matches_eigenvector(small_graphs):
+    for name, g in small_graphs.items():
+        pi, err, iters = power_iteration(g, EPS)
+        pi_exact = exact_pagerank(g, EPS)
+        assert l1_error(pi, pi_exact) < 1e-4, name
+        assert iters < 200
+
+
+@pytest.mark.parametrize("engine", ["walks", "counts"])
+def test_simple_pagerank_converges(engine, small_graphs):
+    g = small_graphs["er"]
+    pi_ref, _, _ = power_iteration(g, EPS)
+    K = 100 if engine == "counts" else 400
+    res = simple_pagerank(g, EPS, walks_per_node=K,
+                          key=jax.random.PRNGKey(3), engine=engine)
+    assert l1_error(normalized(res.pi), pi_ref) < 0.12
+    assert topk_overlap(res.pi, np.asarray(pi_ref), k=10) >= 0.6
+
+
+def test_simple_pagerank_unbiased_total_mass(small_graphs):
+    """E[sum zeta] = nK/eps; empirical total within 5%."""
+    g = small_graphs["ring"]
+    K = 200
+    res = simple_pagerank(g, EPS, walks_per_node=K, key=jax.random.PRNGKey(5))
+    expected = g.n * K / EPS
+    assert abs(int(res.zeta.sum()) - expected) / expected < 0.05
+
+
+def test_error_decreases_with_K(small_graphs):
+    g = small_graphs["ba"]
+    pi_ref, _, _ = power_iteration(g, EPS)
+    errs = []
+    for K in (20, 80, 320):
+        res = simple_pagerank(g, EPS, walks_per_node=K,
+                              key=jax.random.PRNGKey(7))
+        errs.append(l1_error(normalized(res.pi), pi_ref))
+    assert errs[2] < errs[0], errs  # Monte Carlo error shrinks ~ 1/sqrt(K)
+
+
+def test_improved_pagerank_matches(small_graphs):
+    g = small_graphs["er"]
+    pi_ref, _, _ = power_iteration(g, EPS)
+    res = improved_pagerank(g, EPS, walks_per_node=150,
+                            key=jax.random.PRNGKey(11))
+    assert l1_error(normalized(res.pi), pi_ref) < 0.15
+    assert res.coupons_used <= res.coupons_created
+    assert res.exhausted_walks == 0  # auto-eta sized generously
+
+
+def test_improved_faster_than_simple_in_congest_rounds(small_graphs):
+    """Theorem 2 vs Theorem 1: stitched walks need fewer CONGEST rounds."""
+    g = small_graphs["er"]
+    simple = simple_pagerank(g, EPS, walks_per_node=60,
+                             key=jax.random.PRNGKey(13), traced=True)
+    improved = improved_pagerank(g, EPS, walks_per_node=60,
+                                 key=jax.random.PRNGKey(13))
+    assert improved.report.congest_rounds < simple.report.congest_rounds
+
+
+def test_directed_local_variant():
+    g = directed_web(96, 5.0, seed=3)
+    pi_ref, _, _ = power_iteration(g, EPS)
+    res = directed_local_pagerank(g, EPS, walks_per_node=150,
+                                  key=jax.random.PRNGKey(17))
+    assert l1_error(normalized(res.pi), pi_ref) < 0.15
+
+
+def test_default_K_accuracy(small_graphs):
+    """K = c log n (Sec 3.2) gives whp-accurate PageRank (Avrachenkov)."""
+    g = small_graphs["grid"]
+    K = walks_per_node_for(g.n, EPS)
+    pi_ref, _, _ = power_iteration(g, EPS)
+    res = simple_pagerank(g, EPS, walks_per_node=K, key=jax.random.PRNGKey(19))
+    assert l1_error(normalized(res.pi), pi_ref) < 0.10

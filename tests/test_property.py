@@ -1,0 +1,80 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine_counts
+from repro.core.graph import from_edges, padded_adjacency
+from repro.kernels.histogram import histogram
+from repro.kernels.histogram.ref import histogram_ref
+from repro.models.moe import _rank_within
+from repro.train.optimizer import dequantize_blockwise, quantize_blockwise
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+@given(st.lists(st.integers(min_value=-1, max_value=49), min_size=1,
+                max_size=400),
+       st.integers(min_value=1, max_value=50))
+def test_histogram_matches_ref(ids, n):
+    ids = jnp.asarray(ids, jnp.int32)
+    np.testing.assert_array_equal(np.asarray(histogram(ids, n)),
+                                  np.asarray(histogram_ref(ids, n)))
+
+
+@given(st.lists(st.integers(min_value=0, max_value=9), min_size=1,
+                max_size=300))
+def test_rank_within_is_a_ranking(ids):
+    ids_j = jnp.asarray(ids, jnp.int32)
+    rank = np.asarray(_rank_within(ids_j))
+    for v in set(ids):
+        ranks_v = sorted(rank[np.asarray(ids) == v].tolist())
+        assert ranks_v == list(range(len(ranks_v)))  # 0..k-1, no dup/gap
+
+
+@given(st.integers(min_value=1, max_value=2**20))
+def test_quantize_roundtrip_bound(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * 10
+    q, s = quantize_blockwise(x)
+    back = dequantize_blockwise(q, s)
+    bound = np.asarray(jnp.abs(x.reshape(-1, 128)).max(axis=1)) / 127.0
+    err = np.asarray(jnp.abs((x - back).reshape(-1, 128)).max(axis=1))
+    assert (err <= bound * 0.51 + 1e-6).all()
+
+
+@given(st.integers(min_value=2, max_value=40),
+       st.integers(min_value=0, max_value=100),
+       st.integers(min_value=0, max_value=2**16))
+def test_multinomial_split_conserves(deg, count, seed):
+    """Binomial-chain multinomial: total out == total in, any degree."""
+    degs = jnp.asarray([deg, 1, 3], jnp.int32)
+    counts = jnp.asarray([count, 5, 0], jnp.int32)
+    T, rem = engine_counts._multinomial_split(
+        jax.random.PRNGKey(seed), counts, degs, int(degs.max()))
+    assert int(rem.sum()) == 0
+    np.testing.assert_array_equal(np.asarray(T.sum(axis=1)),
+                                  np.asarray(counts))
+
+
+@given(st.lists(st.tuples(st.integers(0, 19), st.integers(0, 19)),
+                min_size=1, max_size=100))
+def test_csr_total_degree(edges):
+    src = np.array([e[0] for e in edges])
+    dst = np.array([e[1] for e in edges])
+    g = from_edges(src, dst, 20, undirected=False, dedup=True)
+    assert int(np.asarray(g.out_deg).sum()) == g.m
+    nbr, valid = padded_adjacency(g)
+    assert int(np.asarray(valid).sum()) == g.m
+
+
+@given(st.integers(min_value=1, max_value=2**16))
+def test_pagerank_estimate_near_normalized(seed):
+    """pi_tilde sums to ~1 (unbiased estimator of a distribution)."""
+    from repro.core import simple_pagerank
+    from repro.graphs import erdos_renyi
+    g = erdos_renyi(48, 4.0, seed=seed % 7)
+    res = simple_pagerank(g, 0.3, walks_per_node=60,
+                          key=jax.random.PRNGKey(seed))
+    assert 0.9 < float(res.pi.sum()) < 1.1

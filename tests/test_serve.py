@@ -1,0 +1,91 @@
+"""Serving: incremental decode ≡ full-context forward; continuous batching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced_config
+from repro.models import get_model
+from repro.serve import ContinuousBatcher, Request
+
+
+def _extras(cfg, B, key):
+    extra = {}
+    if cfg.family == "audio":
+        extra["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model)).astype(jnp.bfloat16)
+    if cfg.family == "vlm":
+        extra["img_embeds"] = jax.random.normal(
+            key, (B, cfg.num_image_tokens, cfg.d_model)).astype(jnp.bfloat16)
+    return extra
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_matches_full_forward(arch, key):
+    cfg = reduced_config(arch)
+    model = get_model(cfg)
+    params, _ = model.init_params(cfg, key)
+    B, T = 2, 24
+    toks = jax.random.randint(key, (B, T + 1), 0, cfg.vocab_size)
+    extra = _extras(cfg, B, key)
+    ref_logits, _ = model.prefill(params, toks, cfg, q_chunk=8, **extra)
+    _, cache = model.prefill(params, toks[:, :T], cfg, q_chunk=8,
+                             pad_cache_to=T + 48, **extra)
+    dec_logits, _ = model.decode_step(params, cache, toks[:, T:T + 1], cfg)
+    a = np.asarray(ref_logits[:, -1], np.float32)
+    b = np.asarray(dec_logits[:, -1], np.float32)
+    err = np.abs(a - b).max() / (np.abs(a).max() + 1e-6)
+    assert err < 0.05, (arch, err)
+
+
+def test_multi_step_decode_consistency(key):
+    """Greedy decode token-by-token == teacher-forced full forwards."""
+    cfg = reduced_config("qwen3-32b")
+    model = get_model(cfg)
+    params, _ = model.init_params(cfg, key)
+    B, T, n_new = 1, 10, 5
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    _, cache = model.prefill(params, toks, cfg, q_chunk=8,
+                             pad_cache_to=T + n_new + 8)
+    seq = list(np.asarray(toks[0]))
+    # drive from prefill's next-token prediction
+    pre_logits, _ = model.prefill(params, toks, cfg, q_chunk=8)
+    nxt = int(jnp.argmax(pre_logits[0, -1]))
+    for _ in range(n_new):
+        seq.append(nxt)
+        full_logits, _ = model.prefill(
+            params, jnp.asarray([seq], jnp.int32), cfg, q_chunk=8)
+        want = int(jnp.argmax(full_logits[0, -1]))
+        step_logits, cache = model.decode_step(
+            params, cache, jnp.asarray([[nxt]], jnp.int32), cfg)
+        got = int(jnp.argmax(step_logits[0, -1]))
+        assert got == want
+        nxt = got
+
+
+def test_continuous_batching_matches_isolated(key):
+    cfg = reduced_config("h2o-danube-3-4b")  # exercises SWA ring buffers
+    model = get_model(cfg)
+    params, _ = model.init_params(cfg, key)
+    rng = np.random.default_rng(0)
+
+    def greedy_ref(prompt, n_new):
+        toks = jnp.asarray(prompt[None, :])
+        logits, cache = model.prefill(params, toks, cfg, q_chunk=64,
+                                      pad_cache_to=64)
+        out = [int(jnp.argmax(logits[0, -1]))]
+        for _ in range(n_new - 1):
+            logits, cache = model.decode_step(
+                params, cache, jnp.asarray([[out[-1]]], jnp.int32), cfg)
+            out.append(int(jnp.argmax(logits[0, -1])))
+        return out
+
+    prompts = [rng.integers(0, cfg.vocab_size, size=L).astype(np.int32)
+               for L in (5, 9, 7)]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    stats = ContinuousBatcher(model, params, cfg, slots=2,
+                              max_seq=64).run(reqs)
+    assert stats.completed == 3
+    for r, p in zip(reqs, prompts):
+        assert r.generated[:5] == greedy_ref(p, 5), r.rid

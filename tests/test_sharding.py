@@ -1,0 +1,60 @@
+"""Sharding rules engine: divisibility, axis reuse, tree shardings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_local_mesh
+from repro.sharding import ShardingRules, active_rules, default_rules, maybe_constrain
+
+
+@pytest.fixture(scope="module")
+def rules1x1():
+    return ShardingRules(make_local_mesh(), default_rules(False))
+
+
+def test_spec_basic(rules1x1):
+    # 1x1 mesh: everything maps but to trivial axes
+    s = rules1x1.spec(("batch", "seq", "embed"), (8, 16, 32))
+    assert s == P("data", None, None)
+
+
+def test_spec_divisibility_drop(rules1x1):
+    # weights: vocab -> model (TP), embed -> data (FSDP at rest)
+    s = rules1x1.spec(("vocab", "embed"), (7, 4))
+    assert s == P("model", "data")  # 7 % 1 == 0 on the local mesh
+
+
+def test_spec_unknown_axis(rules1x1):
+    s = rules1x1.spec(("nonexistent", None), (4, 4))
+    assert s == P(None, None)
+
+
+def test_no_axis_reuse(rules1x1):
+    # two dims both wanting "model": second one must drop
+    s = rules1x1.spec(("vocab", "ffn"), (16, 16))
+    assert s == P("model", None)
+
+
+def test_maybe_constrain_noop_outside_context():
+    x = jnp.ones((4, 4))
+    y = maybe_constrain(x, ("batch", None))
+    assert y is x
+
+
+def test_constrain_inside_context(rules1x1):
+    x = jnp.ones((4, 4))
+    with active_rules(rules1x1):
+        y = maybe_constrain(x, ("batch", None))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_tree_shardings(rules1x1):
+    shapes = dict(w=jax.ShapeDtypeStruct((8, 4), jnp.float32),
+                  b=jax.ShapeDtypeStruct((4,), jnp.float32))
+    axes = dict(w=("embed", "ffn"), b=("ffn",))
+    sh = rules1x1.tree_shardings(shapes, axes)
+    # weights: embed dim FSDP-sharded over data, ffn TP-sharded over model
+    assert sh["w"].spec == P("data", "model")
+    assert sh["b"].spec == P("model")
