@@ -1,8 +1,12 @@
-"""Distributed engine scaling: walk-routing vs count-aggregated wire.
+"""Distributed engine scaling: Algorithm 1 (walk-routing and
+count-aggregated wire) vs Algorithm 2 (sharded IMPROVED-PAGERANK).
 
-Reproduces the §Perf hillclimb measurements: all_to_all payload to full
-termination for both engines at 2/4/8 shards and two walk counts
-(subprocess per shard count — device count is process-global).
+Reproduces the §Perf hillclimb measurements: all_to_all payload and round
+counts to full termination for all three engines at 2/8 shards and two
+walk counts (subprocess per shard count — device count is process-global).
+Emitted columns per engine: wall time, total rounds, phase-round breakdown
+(Algorithm 2 only: p1/report/p2/p3/tail), and wire volume (total
+all_to_all payload bytes, by phase for Algorithm 2).
 """
 from __future__ import annotations
 
@@ -18,6 +22,7 @@ _CODE = """
 import json, time, jax
 from repro.core.distributed import distributed_pagerank
 from repro.core.distributed_counts import distributed_pagerank_counts
+from repro.core.distributed_improved import distributed_improved_pagerank
 from repro.graphs import erdos_renyi
 g = erdos_renyi(200, 6.0, seed=3)
 out = []
@@ -28,10 +33,25 @@ for K in (100, 400):
     t0 = time.time()
     rc = distributed_pagerank_counts(g, 0.2, K, jax.random.PRNGKey(1))
     tc = time.time() - t0
-    out.append(dict(K=K, walk_a2a=rw.a2a_bytes_total,
-                    count_a2a=rc.a2a_bytes_total,
-                    walk_us=tw * 1e6, count_us=tc * 1e6,
-                    shards=rw.shards))
+    t0 = time.time()
+    ri = distributed_improved_pagerank(g, 0.2, K, jax.random.PRNGKey(2))
+    ti = time.time() - t0
+    out.append(dict(K=K, shards=rw.shards,
+                    walk_a2a=rw.a2a_bytes_total, walk_rounds=rw.rounds,
+                    walk_us=tw * 1e6,
+                    count_a2a=rc.a2a_bytes_total, count_rounds=rc.rounds,
+                    count_us=tc * 1e6,
+                    imp_a2a=ri.a2a_bytes_total, imp_rounds=ri.rounds,
+                    imp_us=ti * 1e6,
+                    imp_phases=dict(p1=ri.phase1_rounds,
+                                    report=ri.report_rounds,
+                                    p2=ri.phase2_rounds,
+                                    p3=ri.phase3_rounds,
+                                    tail=ri.tail_rounds),
+                    imp_wire=ri.a2a_bytes_by_phase,
+                    imp_coupons=dict(created=ri.coupons_created,
+                                     used=ri.coupons_used,
+                                     exhausted=ri.exhausted_walks)))
 print(json.dumps(out))
 """
 
@@ -43,7 +63,7 @@ def run(shard_counts=(2, 8)):
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
         env["PYTHONPATH"] = SRC
         res = subprocess.run([sys.executable, "-c", _CODE], env=env,
-                             capture_output=True, text=True, timeout=1200)
+                             capture_output=True, text=True, timeout=1800)
         if res.returncode != 0:
             rows.append(dict(shards=p, error=res.stderr[-200:]))
             continue
@@ -58,11 +78,23 @@ def main():
         if "error" in r:
             print(f"dist_shards{r['shards']},0,ERROR={r['error'][:80]}")
             continue
-        print(f"dist_walk_P{r['shards']}_K{r['K']},{r['walk_us']:.0f},"
-              f"a2a_bytes={r['walk_a2a']}")
-        print(f"dist_count_P{r['shards']}_K{r['K']},{r['count_us']:.0f},"
-              f"a2a_bytes={r['count_a2a']};"
+        p, k = r["shards"], r["K"]
+        print(f"dist_walk_P{p}_K{k},{r['walk_us']:.0f},"
+              f"rounds={r['walk_rounds']};a2a_bytes={r['walk_a2a']}")
+        print(f"dist_count_P{p}_K{k},{r['count_us']:.0f},"
+              f"rounds={r['count_rounds']};a2a_bytes={r['count_a2a']};"
               f"reduction={r['walk_a2a']/max(r['count_a2a'],1):.1f}x")
+        ph = r["imp_phases"]
+        phase_s = "/".join(f"{n}={ph[n]}" for n in
+                           ("p1", "report", "p2", "p3", "tail"))
+        wire_s = ";".join(f"{n}_bytes={v}"
+                          for n, v in sorted(r["imp_wire"].items()))
+        cp = r["imp_coupons"]
+        print(f"dist_improved_P{p}_K{k},{r['imp_us']:.0f},"
+              f"rounds={r['imp_rounds']};phases={phase_s};{wire_s};"
+              f"coupons_used={cp['used']}/{cp['created']};"
+              f"exhausted={cp['exhausted']};"
+              f"round_speedup={r['walk_rounds']/max(r['imp_rounds'],1):.2f}x")
     return rows
 
 

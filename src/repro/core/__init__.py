@@ -7,6 +7,17 @@ Public API:
   directed_local_pagerank (Section 5)     — O(sqrt(log n / eps)) LOCAL rounds
   power_iteration                         — classical baseline
   distributed_pagerank                    — shard_map multi-device engine
+                                            (Algorithm 1, walk routing)
+  distributed_pagerank_counts             — shard_map engine, Lemma-1
+                                            count-aggregated wire
+  distributed_improved_pagerank           — shard_map multi-device engine
+                                            (Algorithm 2, three phases)
+
+The distributed engines live in their own modules (not imported here) so
+that `import repro.core` stays light for single-device workloads:
+`repro.core.distributed`, `repro.core.distributed_counts`,
+`repro.core.distributed_improved`, with the shared lane/routing machinery
+in `repro.core.routing`.
 """
 from repro.core.graph import CSRGraph, from_edges, exact_pagerank
 from repro.core.power_iteration import power_iteration

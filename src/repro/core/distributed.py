@@ -27,7 +27,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,24 +35,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.graph import CSRGraph
-
-try:  # jax >= 0.6 stable API
-    from jax import shard_map as _shard_map
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        # check_vma=False: jax.random.binomial's internal while_loop mixes
-        # varying/invariant carries under the VMA checker; collectives in
-        # our supersteps are explicit (psum/all_to_all), so the check adds
-        # nothing.
-        return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False)
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map_old
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
-                              out_specs=out_specs, check_rep=False)
-
+from repro.core.routing import (advance_owned, count_owned_arrivals,
+                                merge_walks, rank_within, route_walks,
+                                shard_map)
 
 AXIS = "shards"
 
@@ -110,19 +95,6 @@ class DistState:
     waited: jnp.ndarray   # [] int32 — routing-lane carry-overs (stat)
 
 
-def _rank_within(sort_key: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """For each element, its rank within its equal-key group (stable)."""
-    W = sort_key.shape[0]
-    order = jnp.argsort(sort_key)
-    sorted_k = sort_key[order]
-    idx = jnp.arange(W)
-    is_start = jnp.concatenate([jnp.ones((1,), bool), sorted_k[1:] != sorted_k[:-1]])
-    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
-    rank_sorted = idx - run_start
-    rank = jnp.zeros((W,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
-    return rank, order
-
-
 def _superstep_local(rp, ci, dg, pos, key, zeta, eps: float, n_loc: int,
                      shards: int, route_cap: int, work_cap: int):
     """One super-step on a single shard (runs under shard_map).
@@ -131,74 +103,38 @@ def _superstep_local(rp, ci, dg, pos, key, zeta, eps: float, n_loc: int,
     squeeze on entry, re-expand on exit.
     """
     rp, ci, dg, pos, key, zeta = (rp[0], ci[0], dg[0], pos[0], key[0], zeta[0])
-    cap = pos.shape[0]
     shard_id = jax.lax.axis_index(AXIS)
 
     # ---- route: send non-owned walks, up to route_cap per target ----
-    valid = pos >= 0
-    owner = jnp.where(valid, pos // n_loc, shards)
-    needs = valid & (owner != shard_id)
-    sort_key = jnp.where(needs, owner, shards)  # local/empty sort last
-    rank, _ = _rank_within(sort_key)
-    sendable = needs & (rank < route_cap)
-    # unique (owner, rank) per sendable walk; everyone else dumps into the
-    # sentinel slot past the end (mode="drop" discards it)
-    flat_idx = jnp.where(sendable, owner * route_cap + rank,
-                         shards * route_cap)
-    send = (jnp.full((shards * route_cap,), -1, dtype=jnp.int32)
-            .at[flat_idx].set(jnp.where(sendable, pos, -1), mode="drop")
-            .reshape(shards, route_cap))
-    waited = jnp.sum(needs & ~sendable)
-    kept = jnp.where(sendable, -1, pos)  # sent slots freed
-
-    recv = jax.lax.all_to_all(send, AXIS, split_axis=0, concat_axis=0,
-                              tiled=True)  # [shards*route_cap]
-    recv = recv.reshape(-1)
+    kept, _, recv, _, waited, sent = route_walks(
+        pos, {}, axis=AXIS, shard_id=shard_id, n_loc=n_loc, shards=shards,
+        route_cap=route_cap)
     arrived = recv >= 0
     # count arrivals (they are owned by me by construction)
-    zeta = zeta + jax.ops.segment_sum(
-        arrived.astype(jnp.int32),
-        jnp.where(arrived, recv - shard_id * n_loc, n_loc),
-        num_segments=n_loc + 1)[:n_loc]
+    zeta = zeta + count_owned_arrivals(arrived, recv, shard_id, n_loc)
 
     # ---- merge buffer: kept walks + arrivals, compact into cap slots ----
-    merged = jnp.concatenate([kept, jnp.where(arrived, recv, -1)])
-    order = jnp.argsort(jnp.where(merged >= 0, 0, 1), stable=True)
-    merged = merged[order]
-    total_valid = jnp.sum(merged >= 0)
-    dropped = jnp.maximum(total_valid - cap, 0)
-    pos = merged[:cap]
+    pos, _, dropped = merge_walks(kept, {}, recv, {}, pos.shape[0])
 
     # ---- step: advance owned walks (straggler-bounded) ----
     key, k_term, k_edge = jax.random.split(key, 3)
     valid = pos >= 0
     owner = jnp.where(valid, pos // n_loc, shards)
     owned = valid & (owner == shard_id)
-    owned_rank, _ = _rank_within(jnp.where(owned, 0, 1).astype(jnp.int32))
+    owned_rank, _ = rank_within(jnp.where(owned, 0, 1).astype(jnp.int32))
     stepped = owned & (owned_rank < work_cap) if work_cap else owned
-    local = jnp.where(stepped, pos - shard_id * n_loc, 0)
-    deg = dg[local]
-    u_term = jax.random.uniform(k_term, (cap,))
-    survive = stepped & (u_term >= eps) & (deg > 0)
-    u_edge = jax.random.uniform(k_edge, (cap,))
-    j = jnp.minimum((u_edge * jnp.maximum(deg, 1)).astype(jnp.int32),
-                    jnp.maximum(deg - 1, 0))
-    eid = jnp.clip(rp[local] + j, 0, ci.shape[0] - 1)
-    dst = ci[eid]
+    survive, dst = advance_owned(rp, ci, dg, pos, stepped, k_term, k_edge,
+                                 eps, shard_id, n_loc)
     new_pos = jnp.where(survive, dst, jnp.where(stepped, -1, pos))
     # intra-shard arrivals counted immediately
-    dst_owner = dst // n_loc
-    local_arrival = survive & (dst_owner == shard_id)
-    zeta = zeta + jax.ops.segment_sum(
-        local_arrival.astype(jnp.int32),
-        jnp.where(local_arrival, dst - shard_id * n_loc, n_loc),
-        num_segments=n_loc + 1)[:n_loc]
+    local_arrival = survive & (dst // n_loc == shard_id)
+    zeta = zeta + count_owned_arrivals(local_arrival, dst, shard_id, n_loc)
 
     # global (replicated) scalar stats
     active = jax.lax.psum(jnp.sum(new_pos >= 0), AXIS)
     dropped = jax.lax.psum(dropped, AXIS)
     waited = jax.lax.psum(waited, AXIS)
-    a2a_bytes = jax.lax.psum(jnp.sum(send >= 0) * 4, AXIS)
+    a2a_bytes = jax.lax.psum(sent * 4, AXIS)
     return (new_pos[None], key[None], zeta[None],
             active, dropped, waited, a2a_bytes)
 
@@ -234,6 +170,9 @@ class DistributedResult:
     waited: int
     a2a_bytes_total: int
     shards: int
+    # per-round telemetry: walks alive after each super-step (walks only
+    # terminate, so this must be non-increasing for a conserving run)
+    round_active: List[int] = dataclasses.field(default_factory=list)
 
 
 def distributed_pagerank(
@@ -289,17 +228,20 @@ def distributed_pagerank(
                            int(route_cap), int(work_cap))
     a2a_total = 0
     rounds = 0
+    round_active: List[int] = []
     while rounds < max_rounds:
         state, active, a2a = step(sg_rp, sg_ci, sg_dg, state)
         a2a_total += int(a2a)
         rounds += 1
+        round_active.append(int(active))
         if int(active) == 0:
             break
     zeta = state.zeta.reshape(-1)[: graph.n]
     pi = zeta.astype(jnp.float32) * (eps / (graph.n * walks_per_node))
     return DistributedResult(
         zeta=zeta, pi=pi, rounds=rounds, dropped=int(state.dropped),
-        waited=int(state.waited), a2a_bytes_total=a2a_total, shards=shards)
+        waited=int(state.waited), a2a_bytes_total=a2a_total, shards=shards,
+        round_active=round_active)
 
 
 # --------------------------------------------------------------------------

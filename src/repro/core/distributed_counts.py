@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.distributed import AXIS, shard_map
 from repro.core.graph import CSRGraph
+from repro.core.routing import lane_slots
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,19 +152,7 @@ def _superstep(nbr, valid, deg, counts, key, zeta, *, eps: float,
         cnt2 = per_vertex
     has = cnt2 > 0
     v_owner = vid2 // n_loc
-    sort_key = jnp.where(has, v_owner, shards)
-    order = jnp.argsort(sort_key)
-    # rank within owner group
-    sorted_k = sort_key[order]
-    idx = jnp.arange(vid2.shape[0])
-    is_start = jnp.concatenate([jnp.ones((1,), bool),
-                                sorted_k[1:] != sorted_k[:-1]])
-    run_start = jax.lax.associative_scan(jnp.maximum,
-                                         jnp.where(is_start, idx, 0))
-    rank_sorted = (idx - run_start).astype(jnp.int32)
-    rank = jnp.zeros_like(vid2).at[order].set(rank_sorted)
-    ok = has & (rank < lane_cap)
-    lane_idx = jnp.where(ok, v_owner * lane_cap + rank, shards * lane_cap)
+    ok, lane_idx = lane_slots(v_owner, has, shards, lane_cap)
     if packed:
         local_vid = (vid2 % n_loc).astype(jnp.int32)
         payload = local_vid | (cnt2.astype(jnp.int32) << 16)

@@ -1,0 +1,618 @@
+"""Multi-device IMPROVED-PAGERANK engine — shard_map realization of
+Algorithm 2 on the vertex-partitioned `ShardedGraph`.
+
+The single-device `improved_pagerank.py` holds the whole coupon pool and
+every trajectory in one address space; this engine is the CONGEST-faithful
+TPU-pod version: vertices are partitioned into contiguous shards (one per
+mesh device) and every exchange is a fixed-capacity `all_to_all` built from
+the shared lane machinery in `routing.py`. Payloads carry anonymous
+positions/counters, never walk identities (Lemma 1 discipline).
+
+Phase 1 — short-walk pre-computation. Shard p owns the coupons of its
+  vertices: vertex v gets pool_size(v) = d(v)*eta coupons (Lemma 2 sizing,
+  see `improved_pagerank.coupon_pool_sizes`), each a PageRank walk given
+  exactly lambda = ceil(sqrt(log n)) step opportunities (eps-reset or a
+  dangling vertex terminates it early). Coupon ids are `home * S_loc_pad +
+  local_index`, so a coupon's home shard is a single integer divide.
+  Walks move with route/step supersteps identical to the Algorithm 1
+  engine (`distributed.py`): cross-shard movers ride `route_cap`-bounded
+  lanes and *wait* when a lane is full. A closing report exchange routes
+  each coupon's (destination, length, terminated) summary back to its
+  home shard — the paper's "destinations report their ID" step.
+
+Phase 2 — stitching. The n*K long walks live at the owner shard of their
+  current connector vertex. Each stitch superstep routes walks to their
+  connector's owner, then allocates each walk the next unused coupon of
+  that connector (sort-and-rank gives concurrent walks consecutive
+  offsets — natural-order consumption, distributionally identical to
+  uniform-without-replacement because coupons are iid). The walk jumps to
+  the coupon's recorded destination in O(1) rounds and keeps stitching
+  until a coupon's recorded eps-reset fires (a coupon is a fresh iid
+  short walk, so unlimited stitching samples the same distribution as
+  naive walking — no length cap needed for unbiasedness). A walk whose
+  connector pool is exhausted (eta undersized — the paper's whp bound
+  violated) falls back to naive distributed walking, tracked per round.
+
+Phase 3 — counting. Used-coupon visits are counted at owner shards by
+  *deterministic replay* of Phase 1 (same keys, same buffers, same lane
+  schedule => identical trajectories), with arrivals masked by the used
+  bitmap — the distributed analogue of the paper's reverse-trace; the
+  replay costs exactly phase1_rounds supersteps and is charged to Phase 3.
+  The used bitmap is broadcast once (its bytes are charged to Phase 3 wire
+  volume). Fallback/tail walks then finish naively through the Algorithm 1
+  superstep (`distributed._make_superstep`), counting arrivals into the
+  same sharded zeta; the estimator pi = zeta * eps/(nK) is reduced with a
+  final psum over the mesh axis.
+
+Static shapes throughout; buffer overflow is counted in `dropped` and must
+stay 0 for an exact run. Sizing rule, per phase with W resident walks:
+`cap >= max(2*W/P, W_loc_max) + P*64` with `route_cap >= W/P` (mirrors
+`distributed.py`; the `W_loc_max` term covers degree-skewed Phase 1
+starts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.accounting import CongestReport, RoundTrace, default_bandwidth
+from repro.core.distributed import (AXIS, DistState, _make_superstep,
+                                    shard_graph, shard_map)
+from repro.core.graph import CSRGraph
+from repro.core.improved_pagerank import coupon_pool_sizes
+from repro.core.routing import (advance_owned, count_owned_arrivals,
+                                exchange_stacked, lane_slots, merge_walks,
+                                pack_lanes, rank_within, route_walks)
+from repro.core.simple_pagerank import walks_per_node_for
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: short-walk pre-computation (+ deterministic replay for Phase 3)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ShortWalkState:
+    pos: jnp.ndarray     # [P, cap1] global vertex, -1 = empty slot
+    cid: jnp.ndarray     # [P, cap1] coupon id = home * S_loc_pad + local idx
+    steps: jnp.ndarray   # [P, cap1] step opportunities consumed (<= lam)
+    moves: jnp.ndarray   # [P, cap1] actual moves (the coupon's length)
+    alive: jnp.ndarray   # [P, cap1] 1 until the eps-reset / dangling stop
+    key: jnp.ndarray     # [P, 2] per-shard PRNG keys
+    zeta: jnp.ndarray    # [P, n_loc] visit counters (written only in replay)
+
+
+def _p1_local(rp, ci, dg, pos, cid, steps, moves, alive, key, zeta, used, *,
+              eps: float, lam: int, n_loc: int, shards: int, route_cap: int,
+              count: bool):
+    """One Phase-1 super-step on a single shard (route, then step).
+
+    With `count=True` (the Phase-3 replay) arrivals of coupons flagged in
+    the replicated `used` bitmap are added to zeta at the owner shard —
+    immediately for intra-shard moves, at receive time for routed ones.
+    """
+    rp, ci, dg, pos, cid, steps, moves, alive, key, zeta = (
+        rp[0], ci[0], dg[0], pos[0], cid[0], steps[0], moves[0], alive[0],
+        key[0], zeta[0])
+    shard_id = jax.lax.axis_index(AXIS)
+
+    fields = dict(cid=cid, steps=steps, moves=moves, alive=alive)
+    kept_pos, kept_f, recv_pos, recv_f, waited, sent = route_walks(
+        pos, fields, axis=AXIS, shard_id=shard_id, n_loc=n_loc,
+        shards=shards, route_cap=route_cap)
+    arrived = recv_pos >= 0
+    if count:
+        u = used[jnp.clip(recv_f["cid"], 0, used.shape[0] - 1)] > 0
+        zeta = zeta + count_owned_arrivals(arrived & u, recv_pos, shard_id,
+                                           n_loc)
+    pos, f, dropped = merge_walks(kept_pos, kept_f, recv_pos, recv_f,
+                                  pos.shape[0])
+    cid, steps, moves, alive = f["cid"], f["steps"], f["moves"], f["alive"]
+
+    key, k_term, k_edge = jax.random.split(key, 3)
+    valid = pos >= 0
+    owned = valid & (pos // n_loc == shard_id)
+    eligible = owned & (alive > 0) & (steps < lam)
+    survive, dst = advance_owned(rp, ci, dg, pos, eligible, k_term, k_edge,
+                                 eps, shard_id, n_loc)
+    new_pos = jnp.where(survive, dst, pos)
+    steps = steps + eligible.astype(jnp.int32)
+    alive = jnp.where(eligible, survive.astype(jnp.int32), alive)
+    moves = moves + survive.astype(jnp.int32)
+    if count:
+        u = used[jnp.clip(cid, 0, used.shape[0] - 1)] > 0
+        local_arrival = survive & (dst // n_loc == shard_id)
+        zeta = zeta + count_owned_arrivals(local_arrival & u, dst, shard_id,
+                                           n_loc)
+
+    # work left: walks with step opportunities remaining, plus in-flight
+    # walks that still must be delivered to (and recorded at) their owner
+    owned2 = (new_pos >= 0) & (new_pos // n_loc == shard_id)
+    working = ((alive > 0) & (steps < lam)) | ((new_pos >= 0) & ~owned2)
+    pending = jax.lax.psum(jnp.sum(working), AXIS)
+    dropped = jax.lax.psum(dropped, AXIS)
+    waited = jax.lax.psum(waited, AXIS)
+    sent = jax.lax.psum(sent, AXIS)
+    return (new_pos[None], cid[None], steps[None], moves[None], alive[None],
+            key[None], zeta[None], pending, dropped, waited, sent)
+
+
+def _make_p1_step(mesh: Mesh, *, eps: float, lam: int, n_loc: int,
+                  shards: int, route_cap: int, count: bool):
+    fn = partial(_p1_local, eps=eps, lam=lam, n_loc=n_loc, shards=shards,
+                 route_cap=route_cap, count=count)
+    sharded = shard_map(
+        fn, mesh,
+        in_specs=(P(AXIS),) * 10 + (P(),),
+        out_specs=(P(AXIS),) * 7 + (P(), P(), P(), P()))
+
+    @jax.jit
+    def step(rp, ci, dg, st: ShortWalkState, used):
+        (pos, cid, steps, moves, alive, key, zeta,
+         pending, dropped, waited, sent) = sharded(
+            rp, ci, dg, st.pos, st.cid, st.steps, st.moves, st.alive,
+            st.key, st.zeta, used)
+        return (ShortWalkState(pos=pos, cid=cid, steps=steps, moves=moves,
+                               alive=alive, key=key, zeta=zeta),
+                pending, dropped, waited, sent)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Phase 1 closing report: coupon summaries back to their home shards
+# ---------------------------------------------------------------------------
+
+def _report_local(pos, cid, moves, alive, pending, dest, clen, cterm, *,
+                  shards: int, S_loc_pad: int, rep_cap: int):
+    """Route each finished coupon's (dest, length, terminated) summary to
+    its home shard; up to rep_cap per target per round, the rest wait."""
+    pos, cid, moves, alive, pending, dest, clen, cterm = (
+        pos[0], cid[0], moves[0], alive[0], pending[0], dest[0], clen[0],
+        cterm[0])
+    shard_id = jax.lax.axis_index(AXIS)
+    is_p = pending > 0
+    home = jnp.where(is_p, cid // S_loc_pad, shards)
+    term = 1 - alive
+
+    local_rep = is_p & (home == shard_id)
+    li = jnp.where(local_rep, cid % S_loc_pad, S_loc_pad)
+    dest = dest.at[li].set(jnp.where(local_rep, pos, 0), mode="drop")
+    clen = clen.at[li].set(jnp.where(local_rep, moves, 0), mode="drop")
+    cterm = cterm.at[li].set(jnp.where(local_rep, term, 0), mode="drop")
+
+    remote = is_p & (home != shard_id)
+    sendable, flat_idx = lane_slots(home, remote, shards, rep_cap)
+    l_cid = pack_lanes(flat_idx, cid, sendable, shards, rep_cap, fill=-1)
+    r_cid, r_pos, r_mov, r_trm = exchange_stacked(
+        [l_cid] + [pack_lanes(flat_idx, v, sendable, shards, rep_cap,
+                              fill=0) for v in (pos, moves, term)],
+        AXIS, shards, rep_cap)
+    got = r_cid >= 0
+    ri = jnp.where(got, r_cid % S_loc_pad, S_loc_pad)
+    dest = dest.at[ri].set(jnp.where(got, r_pos, 0), mode="drop")
+    clen = clen.at[ri].set(jnp.where(got, r_mov, 0), mode="drop")
+    cterm = cterm.at[ri].set(jnp.where(got, r_trm, 0), mode="drop")
+
+    new_pending = (is_p & ~local_rep & ~sendable).astype(jnp.int32)
+    left = jax.lax.psum(jnp.sum(new_pending), AXIS)
+    sent = jax.lax.psum(jnp.sum(l_cid >= 0), AXIS)
+    return (new_pending[None], dest[None], clen[None], cterm[None],
+            left, sent)
+
+
+def _make_report_step(mesh: Mesh, *, shards: int, S_loc_pad: int,
+                      rep_cap: int):
+    fn = partial(_report_local, shards=shards, S_loc_pad=S_loc_pad,
+                 rep_cap=rep_cap)
+    sharded = shard_map(fn, mesh,
+                        in_specs=(P(AXIS),) * 8,
+                        out_specs=(P(AXIS),) * 4 + (P(), P()))
+
+    @jax.jit
+    def step(pos, cid, moves, alive, pending, dest, clen, cterm):
+        return sharded(pos, cid, moves, alive, pending, dest, clen, cterm)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: coupon stitching with static connector exchanges
+# ---------------------------------------------------------------------------
+
+def _p2_local(pos, lend, mode, next_c, used, psize, pstart, dest, clen,
+              cterm, *, n_loc: int, shards: int, route_cap: int,
+              S_loc_pad: int):
+    """One stitch super-step: route long walks to their connector's owner,
+    then allocate each a distinct next-unused coupon and jump to its
+    destination. `mode` 0 = stitching, 1 = fallback (naive tail).
+
+    Unlike the single-device engine (which stops stitching at ell - lam
+    and walks the tail naively), walks here stitch until their reset
+    fires: a coupon is a fresh iid short walk from the connector, so
+    unlimited stitching samples exactly the same distribution while
+    keeping every round a O(1)-stitch round — the naive fallback is
+    reserved for pool exhaustion. Expected coupons per walk is
+    1/(1-(1-eps)^lam) < 1/(eps*lam) + 1, so `coupon_pool_sizes` still
+    overprovisions."""
+    pos, lend, mode, next_c, used, psize, pstart, dest, clen, cterm = (
+        pos[0], lend[0], mode[0], next_c[0], used[0], psize[0], pstart[0],
+        dest[0], clen[0], cterm[0])
+    shard_id = jax.lax.axis_index(AXIS)
+
+    kept_pos, kept_f, recv_pos, recv_f, waited, sent = route_walks(
+        pos, dict(lend=lend, mode=mode), axis=AXIS, shard_id=shard_id,
+        n_loc=n_loc, shards=shards, route_cap=route_cap)
+    pos, f, dropped = merge_walks(kept_pos, kept_f, recv_pos, recv_f,
+                                  pos.shape[0])
+    lend, mode = f["lend"], f["mode"]
+
+    # ---- allocate: distinct next-unused coupon per co-located walk ----
+    valid = pos >= 0
+    owned = valid & (pos // n_loc == shard_id)
+    sa = owned & (mode == 0)                       # stitch-active
+    cur_local = pos - shard_id * n_loc
+    rank, _ = rank_within(jnp.where(sa, cur_local, n_loc))
+    cl = jnp.clip(jnp.where(sa, cur_local, 0), 0, n_loc - 1)
+    offset = next_c[cl] + rank
+    ok = sa & (offset < psize[cl])
+    cid_loc = jnp.clip(pstart[cl] + offset, 0, S_loc_pad - 1)
+    used = used.at[jnp.where(ok, cid_loc, S_loc_pad)].max(
+        jnp.ones_like(cid_loc), mode="drop")
+    # pool pointer advances by the number of *requests* (the paper deletes
+    # coupons on sampling); saturates at the pool size
+    req = jax.ops.segment_sum(sa.astype(jnp.int32),
+                              jnp.where(sa, cur_local, n_loc),
+                              num_segments=n_loc + 1)[:n_loc]
+    next_c = jnp.minimum(next_c + req, psize)
+
+    c_dest = dest[cid_loc]
+    c_len = clen[cid_loc]
+    c_trm = cterm[cid_loc]
+    term_now = ok & (c_trm > 0)          # coupon's eps-reset fired: walk done
+    lend = jnp.where(ok, lend + c_len, lend)
+    new_pos = jnp.where(term_now, -1, jnp.where(ok, c_dest, pos))
+    exhaust = sa & ~ok                             # pool empty: naive tail
+    mode = jnp.where(exhaust, 1, mode)
+
+    stitched = jax.lax.psum(jnp.sum(ok), AXIS)
+    terminated = jax.lax.psum(jnp.sum(term_now), AXIS)
+    exhausted = jax.lax.psum(jnp.sum(exhaust), AXIS)
+    active = jax.lax.psum(jnp.sum((new_pos >= 0) & (mode == 0)), AXIS)
+    dropped = jax.lax.psum(dropped, AXIS)
+    waited = jax.lax.psum(waited, AXIS)
+    sent = jax.lax.psum(sent, AXIS)
+    return (new_pos[None], lend[None], mode[None], next_c[None], used[None],
+            active, stitched, terminated, exhausted, dropped, waited, sent)
+
+
+def _make_p2_step(mesh: Mesh, *, n_loc: int, shards: int, route_cap: int,
+                  S_loc_pad: int):
+    fn = partial(_p2_local, n_loc=n_loc, shards=shards, route_cap=route_cap,
+                 S_loc_pad=S_loc_pad)
+    sharded = shard_map(fn, mesh,
+                        in_specs=(P(AXIS),) * 10,
+                        out_specs=(P(AXIS),) * 5 + (P(),) * 7)
+
+    @jax.jit
+    def step(pos, lend, mode, next_c, used, psize, pstart, dest, clen,
+             cterm):
+        return sharded(pos, lend, mode, next_c, used, psize, pstart, dest,
+                       clen, cterm)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# estimator reduction
+# ---------------------------------------------------------------------------
+
+def _make_finalize(mesh: Mesh, scale: float):
+    def fin(zeta):
+        z = zeta[0]
+        total = jax.lax.psum(jnp.sum(z), AXIS)
+        return (z.astype(jnp.float32) * scale)[None], total
+
+    return jax.jit(shard_map(fin, mesh, in_specs=(P(AXIS),),
+                             out_specs=(P(AXIS), P())))
+
+
+# ---------------------------------------------------------------------------
+# main driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ImprovedDistResult:
+    zeta: jnp.ndarray            # [n] global visit counts
+    pi: jnp.ndarray
+    shards: int
+    walks_per_node: int
+    eps: float
+    lam: int
+    eta: int
+    ell: int
+    rounds: int                  # total supersteps across all phases
+    phase1_rounds: int
+    report_rounds: int
+    phase2_rounds: int           # stitch supersteps
+    phase3_rounds: int           # replay supersteps (== phase1_rounds)
+    tail_rounds: int             # naive-fallback supersteps
+    stitch_iterations: int
+    exhausted_walks: int
+    terminated_by_coupon: int
+    tail_walks: int
+    coupons_created: int
+    coupons_used: int
+    dropped: int
+    waited: int
+    a2a_bytes_total: int
+    a2a_bytes_by_phase: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    phase2_records: List[dict] = dataclasses.field(default_factory=list)
+    report: Optional[CongestReport] = None
+    total_visits: int = 0
+
+
+def distributed_improved_pagerank(
+    graph: CSRGraph,
+    eps: float,
+    walks_per_node: Optional[int] = None,
+    key: Optional[jnp.ndarray] = None,
+    *,
+    mesh: Optional[Mesh] = None,
+    lam: Optional[int] = None,
+    eta: Optional[int] = None,
+    eta_safety: float = 2.0,
+    cap1: Optional[int] = None,
+    cap2: Optional[int] = None,
+    route_cap1: Optional[int] = None,
+    route_cap2: Optional[int] = None,
+    rep_cap: Optional[int] = None,
+    max_rounds: int = 100_000,
+    bandwidth_bits: Optional[int] = None,
+) -> ImprovedDistResult:
+    """Run Algorithm 2 across all devices of `mesh` (default: all devices)."""
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()), (AXIS,))
+    shards = int(mesh.devices.size)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n = graph.n
+    K = walks_per_node or walks_per_node_for(n, eps)
+    log_n = math.log(max(n, 2))
+    if lam is None:
+        lam = max(1, int(math.ceil(math.sqrt(log_n))))
+    ell = max(lam + 1, int(math.ceil(log_n / eps)))
+
+    sg = shard_graph(graph, shards)
+    n_loc = sg.n_loc
+    spec = NamedSharding(mesh, P(AXIS))
+    sg_rp = jax.device_put(sg.row_ptr, spec)
+    sg_ci = jax.device_put(sg.col_idx, spec)
+    sg_dg = jax.device_put(sg.out_deg, spec)
+
+    # ---- coupon pool layout: contiguous per shard, padded to S_loc_pad ----
+    eta, pool_np = coupon_pool_sizes(graph, eps, K, lam, eta=eta,
+                                     eta_safety=eta_safety)
+    pool_pad = np.zeros(sg.n_pad, dtype=np.int64)
+    pool_pad[:n] = pool_np
+    psize_sh = pool_pad.reshape(shards, n_loc)
+    pstart_sh = np.zeros_like(psize_sh)
+    pstart_sh[:, 1:] = np.cumsum(psize_sh, axis=1)[:, :-1]
+    S_loc = psize_sh.sum(axis=1)
+    S_loc_pad = max(int(S_loc.max()), 1)
+    S_total = int(pool_np.sum())
+    if shards * S_loc_pad >= 2 ** 31:
+        raise ValueError("coupon pool too large for int32 ids")
+
+    if route_cap1 is None:
+        route_cap1 = max(S_total // shards, 64)
+    if cap1 is None:
+        cap1 = max(2 * S_total // shards, S_loc_pad) + shards * 64
+    if route_cap2 is None:
+        route_cap2 = max(n * K // shards, 64)
+    if cap2 is None:
+        cap2 = max(2 * n * K // shards, n_loc * K) + shards * 64
+    if rep_cap is None:
+        rep_cap = max(S_loc_pad // shards, 64)
+
+    # ---- Phase-1 initial placement: each coupon at its source vertex ----
+    pos0 = np.full((shards, cap1), -1, dtype=np.int32)
+    cid0 = np.zeros((shards, cap1), dtype=np.int32)
+    for p in range(shards):
+        owned = pool_pad[p * n_loc:(p + 1) * n_loc]
+        src = np.repeat(np.arange(p * n_loc, (p + 1) * n_loc,
+                                  dtype=np.int32), owned)
+        assert len(src) <= cap1, "cap1 too small for initial placement"
+        pos0[p, : len(src)] = src
+        cid0[p, : len(src)] = p * S_loc_pad + np.arange(len(src),
+                                                        dtype=np.int32)
+    key, k1, k_tail = jax.random.split(key, 3)
+    k1_shards = jax.random.split(k1, shards)
+    zeros1 = np.zeros((shards, cap1), dtype=np.int32)
+
+    def fresh_p1_state(zeta0: np.ndarray) -> ShortWalkState:
+        return ShortWalkState(
+            pos=jax.device_put(jnp.asarray(pos0), spec),
+            cid=jax.device_put(jnp.asarray(cid0), spec),
+            steps=jax.device_put(jnp.asarray(zeros1), spec),
+            moves=jax.device_put(jnp.asarray(zeros1), spec),
+            alive=jax.device_put(jnp.asarray((pos0 >= 0).astype(np.int32)),
+                                 spec),
+            key=jax.device_put(k1_shards, spec),
+            zeta=jax.device_put(jnp.asarray(zeta0), spec))
+
+    wire = dict(phase1=0, report=0, phase2=0, phase3=0, tail=0)
+    traces: List[RoundTrace] = []
+    dropped_total = 0
+    waited_total = 0
+
+    # ---------------- Phase 1 (counting disabled) ----------------
+    p1_step = _make_p1_step(mesh, eps=float(eps), lam=int(lam), n_loc=n_loc,
+                            shards=shards, route_cap=int(route_cap1),
+                            count=False)
+    no_used = jnp.zeros((1,), jnp.int32)
+    st = fresh_p1_state(np.zeros((shards, n_loc), np.int32))
+    phase1_rounds = 0
+    while phase1_rounds < max_rounds:
+        st, pending, dropped, waited, sent = p1_step(sg_rp, sg_ci, sg_dg,
+                                                     st, no_used)
+        phase1_rounds += 1
+        dropped_total += int(dropped)
+        waited_total += int(waited)
+        entries = int(sent)
+        wire["phase1"] += entries * 20          # pos+cid+steps+moves+alive
+        traces.append(RoundTrace(active_walks=int(pending), messages=entries,
+                                 max_edge_count=1, total_count=entries))
+        if int(pending) == 0:
+            break
+    else:
+        raise RuntimeError("phase 1 did not converge within max_rounds")
+
+    # ---------------- Phase 1 closing report exchange ----------------
+    rep_step = _make_report_step(mesh, shards=shards, S_loc_pad=S_loc_pad,
+                                 rep_cap=int(rep_cap))
+    zero_pool = jax.device_put(
+        jnp.zeros((shards, S_loc_pad), jnp.int32), spec)
+    # every live buffer slot holds one (possibly migrated) coupon; empty
+    # slots must not report — their cid field is stale after compaction
+    pending = (st.pos >= 0).astype(jnp.int32)
+    dest, clen, cterm = zero_pool, zero_pool, zero_pool
+    report_rounds = 0
+    while report_rounds < max_rounds:
+        pending, dest, clen, cterm, left, sent = rep_step(
+            st.pos, st.cid, st.moves, st.alive, pending, dest, clen, cterm)
+        report_rounds += 1
+        entries = int(sent)
+        wire["report"] += entries * 16           # cid+dest+len+term
+        traces.append(RoundTrace(active_walks=int(left), messages=entries,
+                                 max_edge_count=1, total_count=entries))
+        if int(left) == 0:
+            break
+    else:
+        raise RuntimeError("phase-1 report did not converge")
+
+    # ---------------- Phase 2: stitching ----------------
+    W = n * K
+    pos2 = np.full((shards, cap2), -1, dtype=np.int32)
+    for p in range(shards):
+        lo = min(p * n_loc, n)
+        hi = min((p + 1) * n_loc, n)
+        locs = np.repeat(np.arange(lo, hi, dtype=np.int32), K)
+        assert len(locs) <= cap2, "cap2 too small for initial placement"
+        pos2[p, : len(locs)] = locs
+    p2_step = _make_p2_step(mesh, n_loc=n_loc, shards=shards,
+                            route_cap=int(route_cap2), S_loc_pad=S_loc_pad)
+    pos2_j = jax.device_put(jnp.asarray(pos2), spec)
+    lend = jax.device_put(jnp.zeros((shards, cap2), jnp.int32), spec)
+    mode = jax.device_put(jnp.zeros((shards, cap2), jnp.int32), spec)
+    next_c = jax.device_put(jnp.zeros((shards, n_loc), jnp.int32), spec)
+    used = jax.device_put(jnp.zeros((shards, S_loc_pad), jnp.int32), spec)
+    psize_j = jax.device_put(jnp.asarray(psize_sh, dtype=jnp.int32), spec)
+    pstart_j = jax.device_put(jnp.asarray(pstart_sh, dtype=jnp.int32), spec)
+
+    phase2_rounds = 0
+    stitches_total = 0
+    terminated_total = 0
+    exhausted_total = 0
+    phase2_records: List[dict] = []
+    while phase2_rounds < max_rounds:
+        (pos2_j, lend, mode, next_c, used, active, stitched, terminated,
+         exhausted, dropped, waited, sent) = p2_step(
+            pos2_j, lend, mode, next_c, used, psize_j, pstart_j, dest, clen,
+            cterm)
+        phase2_rounds += 1
+        stitches_total += int(stitched)
+        terminated_total += int(terminated)
+        exhausted_total += int(exhausted)
+        dropped_total += int(dropped)
+        waited_total += int(waited)
+        entries = int(sent)
+        wire["phase2"] += entries * 12           # pos+len+mode
+        phase2_records.append(dict(
+            active=int(active), stitched=int(stitched),
+            terminated=int(terminated), exhausted=int(exhausted)))
+        traces.append(RoundTrace(active_walks=int(active), messages=entries,
+                                 max_edge_count=1, total_count=entries))
+        if int(active) == 0:
+            break
+    else:
+        raise RuntimeError("phase 2 did not converge within max_rounds")
+    coupons_used = int(np.asarray(used).sum())
+
+    # ---------------- Phase 3: replay Phase 1, counting used coupons ----
+    # One broadcast of the used bitmap (charged to Phase-3 wire volume),
+    # then a deterministic re-run of the Phase-1 schedule with counting on.
+    used_full = jnp.asarray(np.asarray(used).reshape(-1))
+    wire["phase3"] += shards * S_loc_pad * 4
+    zeta0 = np.zeros((shards, n_loc), np.int32)
+    zeta0.reshape(-1)[:n] = K                    # start visits of long walks
+    p3_step = _make_p1_step(mesh, eps=float(eps), lam=int(lam), n_loc=n_loc,
+                            shards=shards, route_cap=int(route_cap1),
+                            count=True)
+    st3 = fresh_p1_state(zeta0)
+    for _ in range(phase1_rounds):
+        st3, pending3, _, _, sent = p3_step(sg_rp, sg_ci, sg_dg, st3,
+                                            used_full)
+        entries = int(sent)
+        wire["phase3"] += entries * 20
+        traces.append(RoundTrace(active_walks=int(pending3),
+                                 messages=entries, max_edge_count=1,
+                                 total_count=entries))
+    phase3_rounds = phase1_rounds
+
+    # ---------------- tail: exhausted/over-budget walks walk naively ----
+    pos_tail = jnp.where((mode == 1) & (pos2_j >= 0), pos2_j, -1)
+    tail_walks = int(jnp.sum(pos_tail >= 0))
+    tail_state = DistState(
+        pos=jax.device_put(pos_tail, spec),
+        zeta=st3.zeta,
+        key=jax.device_put(jax.random.split(k_tail, shards), spec),
+        round=jnp.int32(0), dropped=jnp.int32(0), waited=jnp.int32(0))
+    tail_step = _make_superstep(mesh, float(eps), n_loc, shards,
+                                int(route_cap2), 0)
+    tail_rounds = 0
+    remaining = tail_walks
+    while remaining:
+        if tail_rounds >= max_rounds:
+            raise RuntimeError("tail walks did not converge in max_rounds")
+        tail_state, active, a2a = tail_step(sg_rp, sg_ci, sg_dg, tail_state)
+        tail_rounds += 1
+        entries = int(a2a) // 4
+        wire["tail"] += int(a2a)
+        traces.append(RoundTrace(active_walks=int(active), messages=entries,
+                                 max_edge_count=1, total_count=entries))
+        remaining = int(active)
+    dropped_total += int(tail_state.dropped)
+    waited_total += int(tail_state.waited)
+
+    # ---------------- estimator: psum-reduced across the mesh ----------
+    finalize = _make_finalize(mesh, float(eps) / (n * K))
+    pi_sh, total_visits = finalize(tail_state.zeta)
+    zeta = tail_state.zeta.reshape(-1)[:n]
+    pi = pi_sh.reshape(-1)[:n]
+
+    rounds = (phase1_rounds + report_rounds + phase2_rounds + phase3_rounds
+              + tail_rounds)
+    report = CongestReport(traces=traces, n=n,
+                           bandwidth_bits=bandwidth_bits
+                           or default_bandwidth(n))
+    return ImprovedDistResult(
+        zeta=zeta, pi=pi, shards=shards, walks_per_node=K, eps=eps,
+        lam=int(lam), eta=int(eta), ell=int(ell), rounds=rounds,
+        phase1_rounds=phase1_rounds, report_rounds=report_rounds,
+        phase2_rounds=phase2_rounds, phase3_rounds=phase3_rounds,
+        tail_rounds=tail_rounds, stitch_iterations=phase2_rounds,
+        exhausted_walks=exhausted_total,
+        terminated_by_coupon=terminated_total, tail_walks=tail_walks,
+        coupons_created=S_total, coupons_used=coupons_used,
+        dropped=dropped_total, waited=waited_total,
+        a2a_bytes_total=sum(wire.values()), a2a_bytes_by_phase=wire,
+        phase2_records=phase2_records, report=report,
+        total_visits=int(total_visits))

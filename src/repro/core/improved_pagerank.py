@@ -58,6 +58,31 @@ class ImprovedResult(PageRankResult):
 
 
 # ---------------------------------------------------------------------------
+# coupon pool sizing (shared with the distributed engine)
+# ---------------------------------------------------------------------------
+
+def coupon_pool_sizes(graph: CSRGraph, eps: float, walks_per_node: int,
+                      lam: int, *, eta: Optional[int] = None,
+                      eta_safety: float = 2.0) -> Tuple[int, np.ndarray]:
+    """Degree-proportional Phase-1 pool sizes: d(v)*eta coupons per node.
+
+    eta is sized from the expected stitches-per-node (Lemma 2 in spirit):
+    a long walk has expected length 1/eps => ~1/(eps*lam)+1 stitches;
+    connectors land ∝ d(v)/Σd (undirected near-stationarity). The paper's
+    Theta(log^3 n/eps) overprovisions for whp bounds; we size for the
+    expectation ×safety and keep the naive-walk fallback for the (counted)
+    exhaustion tail. Returns (eta, pool_size[n]); isolated vertices get one
+    coupon so every request resolves deterministically.
+    """
+    deg_np = np.asarray(graph.out_deg)
+    if eta is None:
+        exp_stitches = graph.n * walks_per_node * (1.0 / (eps * lam) + 1.0)
+        eta = max(1, int(math.ceil(
+            eta_safety * exp_stitches / max(deg_np.sum(), 1))))
+    return int(eta), np.maximum(deg_np.astype(np.int64) * eta, 1)
+
+
+# ---------------------------------------------------------------------------
 # Phase 1: short walks with trajectory + edge-id recording
 # ---------------------------------------------------------------------------
 
@@ -180,17 +205,8 @@ def improved_pagerank(
 
     deg_np = np.asarray(graph.out_deg)
     if degree_proportional:
-        # eta sized from the expected stitches-per-node (Lemma 2 in spirit):
-        # a long walk has expected length 1/eps => ~1/(eps*lam)+1 stitches;
-        # connectors land ∝ d(v)/Σd (undirected near-stationarity). The
-        # paper's Theta(log^3 n/eps) overprovisions for whp bounds; we size
-        # for the expectation ×safety and keep the naive-walk fallback for
-        # the (counted) exhaustion tail.
-        if eta is None:
-            exp_stitches = n * K * (1.0 / (eps * lam) + 1.0)
-            eta = max(1, int(math.ceil(
-                eta_safety * exp_stitches / max(deg_np.sum(), 1))))
-        pool_size_np = np.maximum(deg_np * eta, 1)
+        eta, pool_size_np = coupon_pool_sizes(graph, eps, K, lam, eta=eta,
+                                              eta_safety=eta_safety)
     else:
         # Section 5: uniform (polynomial) pool per node.
         if eta is None:

@@ -1,0 +1,205 @@
+"""Shared CONGEST routing machinery for the shard_map engines.
+
+Every multi-device engine in this repo (Algorithm 1 walk-routing in
+`distributed.py`, count-aggregation in `distributed_counts.py`, Algorithm 2
+in `distributed_improved.py`) moves data between vertex shards with the same
+static-shape discipline:
+
+  * per (src_shard, dst_shard) routing lanes of fixed capacity — one
+    `all_to_all` per exchange, payload slots that did not fill carry the
+    sentinel value;
+  * a stable sort-and-rank to assign each outgoing item a distinct lane
+    slot for its target shard; items beyond the lane capacity *wait* and
+    are retried next round (correctness preserved, only latency paid);
+  * walk buffers of fixed capacity `cap`, compacted after each merge, with
+    overflow counted in `dropped` (must stay 0 under the sizing rule
+    `cap >= 2*W/P + P*route_cap`).
+
+This module owns that machinery so the engines share one implementation:
+`rank_within` (stable in-group ranks), `pack_lanes`/`exchange` (lane
+scatter + all_to_all), `route_walks`/`merge_walks` (full route superstep for
+walk buffers with arbitrary payload fields riding along), `advance_owned`
+(one eps-reset/uniform-out-edge PageRank step for owned walks) and
+`count_owned_arrivals` (owner-side visit accounting).
+
+All helpers run *inside* shard_map: `jax.lax.axis_index`/`all_to_all` refer
+to the mesh axis passed as `axis`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+try:  # jax >= 0.6 stable API
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        # check_vma=False: jax.random.binomial's internal while_loop mixes
+        # varying/invariant carries under the VMA checker; collectives in
+        # our supersteps are explicit (psum/all_to_all), so the check adds
+        # nothing.
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
+
+def rank_within(sort_key: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """For each element, its rank within its equal-key group (stable).
+
+    Returns (rank, order): `rank[i]` is the 0-based position of element i
+    among elements with the same `sort_key`, `order` is the stable argsort.
+    """
+    W = sort_key.shape[0]
+    order = jnp.argsort(sort_key)
+    sorted_k = sort_key[order]
+    idx = jnp.arange(W)
+    is_start = jnp.concatenate([jnp.ones((1,), bool),
+                                sorted_k[1:] != sorted_k[:-1]])
+    run_start = jax.lax.associative_scan(jnp.maximum,
+                                         jnp.where(is_start, idx, 0))
+    rank_sorted = idx - run_start
+    rank = jnp.zeros((W,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    return rank, order
+
+
+def lane_slots(target: jnp.ndarray, valid: jnp.ndarray, num_targets: int,
+               lane_cap: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Assign each valid item a distinct (target, rank) lane slot.
+
+    Returns (sendable, flat_idx): `sendable` marks items that fit their
+    target's lane this round; `flat_idx` is the scatter index into a
+    [num_targets * lane_cap] lane array (non-sendable items point at the
+    sentinel slot one past the end — scatter with mode="drop").
+    """
+    sort_key = jnp.where(valid, target, num_targets)  # invalid sort last
+    rank, _ = rank_within(sort_key)
+    sendable = valid & (rank < lane_cap)
+    flat_idx = jnp.where(sendable, target * lane_cap + rank,
+                         num_targets * lane_cap)
+    return sendable, flat_idx
+
+
+def pack_lanes(flat_idx: jnp.ndarray, values: jnp.ndarray,
+               sendable: jnp.ndarray, num_targets: int, lane_cap: int,
+               fill: int = -1) -> jnp.ndarray:
+    """Scatter `values[sendable]` into a [num_targets * lane_cap] lane array."""
+    return (jnp.full((num_targets * lane_cap,), fill, dtype=jnp.int32)
+            .at[flat_idx].set(jnp.where(sendable, values, fill), mode="drop"))
+
+
+def exchange(lanes: jnp.ndarray, axis: str, num_targets: int,
+             lane_cap: int) -> jnp.ndarray:
+    """all_to_all a flat [num_targets * lane_cap] lane array; returns the
+    received lanes flattened back to [num_targets * lane_cap]."""
+    return jax.lax.all_to_all(lanes.reshape(num_targets, lane_cap), axis,
+                              split_axis=0, concat_axis=0,
+                              tiled=True).reshape(-1)
+
+
+def exchange_stacked(lanes: list, axis: str, num_targets: int,
+                     lane_cap: int) -> list:
+    """all_to_all several same-shape lane arrays as ONE collective: slots
+    are interleaved so each (target, slot) carries its F payload columns
+    contiguously. Values are identical to F separate `exchange` calls —
+    this only collapses F collective launches into one."""
+    stacked = jnp.stack(lanes, axis=-1)        # [num_targets*lane_cap, F]
+    F = stacked.shape[-1]
+    recv = jax.lax.all_to_all(
+        stacked.reshape(num_targets, lane_cap * F), axis,
+        split_axis=0, concat_axis=0, tiled=True)
+    recv = recv.reshape(num_targets * lane_cap, F)
+    return [recv[:, i] for i in range(F)]
+
+
+def route_walks(pos: jnp.ndarray, fields: Dict[str, jnp.ndarray], *,
+                axis: str, shard_id: jnp.ndarray, n_loc: int, shards: int,
+                route_cap: int):
+    """One routing exchange: send walks whose current vertex is owned by
+    another shard (up to `route_cap` per target; the rest wait).
+
+    `fields` are extra int32 payload columns riding along with `pos`
+    (coupon ids, lengths, flags, ...). Returns
+    (kept_pos, kept_fields, recv_pos, recv_fields, waited, sent_entries);
+    `recv_*` are [shards * route_cap] with -1 in empty `recv_pos` slots.
+    """
+    valid = pos >= 0
+    owner = jnp.where(valid, pos // n_loc, shards)
+    needs = valid & (owner != shard_id)
+    sendable, flat_idx = lane_slots(owner, needs, shards, route_cap)
+    send_pos = pack_lanes(flat_idx, pos, sendable, shards, route_cap)
+    if fields:
+        send_f = [pack_lanes(flat_idx, vals, sendable, shards, route_cap,
+                             fill=0) for vals in fields.values()]
+        recvs = exchange_stacked([send_pos] + send_f, axis, shards,
+                                 route_cap)
+        recv_pos = recvs[0]
+        recv_fields = dict(zip(fields.keys(), recvs[1:]))
+    else:
+        recv_pos = exchange(send_pos, axis, shards, route_cap)
+        recv_fields = {}
+    kept_pos = jnp.where(sendable, -1, pos)  # sent slots freed
+    kept_fields = {name: jnp.where(sendable, 0, vals)
+                   for name, vals in fields.items()}
+    waited = jnp.sum(needs & ~sendable)
+    sent_entries = jnp.sum(send_pos >= 0)
+    return kept_pos, kept_fields, recv_pos, recv_fields, waited, sent_entries
+
+
+def merge_walks(kept_pos: jnp.ndarray, kept_fields: Dict[str, jnp.ndarray],
+                recv_pos: jnp.ndarray, recv_fields: Dict[str, jnp.ndarray],
+                cap: int):
+    """Compact kept walks + arrivals into the fixed-capacity buffer.
+
+    Valid walks sort first (stable), so arrivals beyond `cap` are the ones
+    dropped; returns (pos, fields, dropped)."""
+    arrived = recv_pos >= 0
+    merged_pos = jnp.concatenate([kept_pos, jnp.where(arrived, recv_pos, -1)])
+    order = jnp.argsort(jnp.where(merged_pos >= 0, 0, 1), stable=True)
+    merged_pos = merged_pos[order]
+    total_valid = jnp.sum(merged_pos >= 0)
+    dropped = jnp.maximum(total_valid - cap, 0)
+    fields = {}
+    for name in kept_fields:
+        merged = jnp.concatenate([kept_fields[name], recv_fields[name]])
+        fields[name] = merged[order][:cap]
+    return merged_pos[:cap], fields, dropped
+
+
+def count_owned_arrivals(mask: jnp.ndarray, v_global: jnp.ndarray,
+                         shard_id: jnp.ndarray, n_loc: int) -> jnp.ndarray:
+    """[n_loc] histogram of `v_global[mask]` rebased to this shard's range
+    (masked entries dump into a discarded overflow segment)."""
+    return jax.ops.segment_sum(
+        mask.astype(jnp.int32),
+        jnp.where(mask, v_global - shard_id * n_loc, n_loc),
+        num_segments=n_loc + 1)[:n_loc]
+
+
+def advance_owned(rp: jnp.ndarray, ci: jnp.ndarray, dg: jnp.ndarray,
+                  pos: jnp.ndarray, eligible: jnp.ndarray,
+                  k_term: jnp.ndarray, k_edge: jnp.ndarray, eps: float,
+                  shard_id: jnp.ndarray, n_loc: int):
+    """One PageRank step for the `eligible` walks of this shard: terminate
+    w.p. eps (or on a dangling vertex), else move along a uniform out-edge.
+
+    Returns (survive, dst): `survive` marks walks that moved, `dst` their
+    new global vertex (meaningful only where `survive`)."""
+    cap = pos.shape[0]
+    local = jnp.where(eligible, pos - shard_id * n_loc, 0)
+    deg = dg[local]
+    u_term = jax.random.uniform(k_term, (cap,))
+    survive = eligible & (u_term >= eps) & (deg > 0)
+    u_edge = jax.random.uniform(k_edge, (cap,))
+    j = jnp.minimum((u_edge * jnp.maximum(deg, 1)).astype(jnp.int32),
+                    jnp.maximum(deg - 1, 0))
+    eid = jnp.clip(rp[local] + j, 0, ci.shape[0] - 1)
+    dst = ci[eid]
+    return survive, dst

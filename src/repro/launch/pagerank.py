@@ -1,11 +1,33 @@
-"""Distributed PageRank driver: sharded engine + fault tolerance.
+"""Distributed PageRank driver: sharded engines + fault tolerance.
 
     PYTHONPATH=src python -m repro.launch.pagerank --n 512 --eps 0.2 \
-        --walks 64 --graph erdos_renyi --checkpoint-dir /tmp/pr_ckpt
+        --walks 64 --graph erdos_renyi --algo improved
 
-Runs Algorithm 1 on all available devices via the shard_map engine under
-the checkpoint-restart supervisor (optionally with injected failures to
-demonstrate exact recovery), then validates against power iteration.
+Engine selection (`--algo`):
+  walks     Algorithm 1, walk-routing shard_map engine (default). Runs
+            under the checkpoint-restart supervisor (optionally with
+            injected failures via --fail-at to demonstrate exact
+            recovery).
+  counts    Algorithm 1, count-aggregated engine (Lemma-1 wire: per-vertex
+            coupon counts, payload independent of the walk count).
+  improved  Algorithm 2 (IMPROVED-PAGERANK), three-phase sharded engine:
+            sqrt(log n)-length short-walk pre-computation, coupon
+            stitching with static connector exchanges, owner-shard visit
+            counting (see `repro.core.distributed_improved`).
+
+Every run validates against power iteration (L1 and top-10 overlap).
+
+Telemetry printed for `--algo improved` (also available on the returned
+`ImprovedDistResult`):
+  phase rounds   per-phase superstep counts: phase1 (short walks), report
+                 (coupon summaries to home shards), phase2 (stitching),
+                 phase3 (replay counting), tail (naive fallback) — their
+                 sum is the engine's total round count, the quantity the
+                 paper bounds by O(sqrt(log n)/eps).
+  coupons        created vs used pool sizes and exhausted walks (pool
+                 ran dry -> naive fallback).
+  wire           all_to_all payload bytes by phase, plus `dropped` (buffer
+                 overflows, must be 0) and `waited` (lane carry-overs).
 """
 from __future__ import annotations
 
@@ -21,16 +43,24 @@ from repro.core import l1_error, normalized, power_iteration, topk_overlap
 from repro.core.distributed import (AXIS, DistState, _make_superstep,
                                     shard_graph, state_from_host,
                                     state_to_host)
+from repro.core.distributed_counts import distributed_pagerank_counts
+from repro.core.distributed_improved import distributed_improved_pagerank
 from repro.graphs import GENERATORS
 from repro.runtime import FailureSchedule, Supervisor
 
 import jax.numpy as jnp
 
 
-def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
-        checkpoint_dir: str | None, fail_at: list[int], seed: int = 0):
-    g = GENERATORS[graph_kind](n, 6.0, seed) if graph_kind != "ring" \
-        else GENERATORS[graph_kind](n)
+def _report_accuracy(pi, g, eps: float) -> None:
+    pi = np.asarray(pi, dtype=np.float64)
+    pi_ref, _, _ = power_iteration(g, eps)
+    print(f"[pagerank] L1 vs power-iter: "
+          f"{l1_error(pi / pi.sum(), pi_ref):.4f}  "
+          f"top-10 overlap: {topk_overlap(pi, np.asarray(pi_ref)):.2f}")
+
+
+def run_walks(g, eps: float, walks_per_node: int, checkpoint_dir,
+              fail_at, seed: int):
     devs = np.array(jax.devices())
     mesh = Mesh(devs, (AXIS,))
     shards = devs.size
@@ -71,12 +101,47 @@ def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
     res = sup.run(state)
     zeta = np.asarray(res.state.zeta).reshape(-1)[: g.n]
     pi = zeta.astype(np.float64) * eps / (g.n * walks_per_node)
-    pi_ref, _, _ = power_iteration(g, eps)
-    print(f"[pagerank] n={n} shards={shards} rounds={res.rounds} "
-          f"restarts={res.restarts} dropped={int(res.state.dropped)}")
-    print(f"[pagerank] L1 vs power-iter: "
-          f"{l1_error(pi / pi.sum(), pi_ref):.4f}  "
-          f"top-10 overlap: {topk_overlap(pi, np.asarray(pi_ref)):.2f}")
+    print(f"[pagerank] algo=walks n={g.n} shards={shards} "
+          f"rounds={res.rounds} restarts={res.restarts} "
+          f"dropped={int(res.state.dropped)}")
+    return pi
+
+
+def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
+        checkpoint_dir: str | None, fail_at: list[int], seed: int = 0,
+        algo: str = "walks"):
+    g = GENERATORS[graph_kind](n, 6.0, seed) if graph_kind != "ring" \
+        else GENERATORS[graph_kind](n)
+    if algo != "walks" and (checkpoint_dir or fail_at):
+        print(f"[pagerank] WARNING: --checkpoint-dir/--fail-at only apply "
+              f"to --algo walks (the supervised engine); ignored for "
+              f"algo={algo}")
+    if algo == "walks":
+        pi = run_walks(g, eps, walks_per_node, checkpoint_dir, fail_at, seed)
+    elif algo == "counts":
+        res = distributed_pagerank_counts(g, eps, walks_per_node,
+                                          jax.random.PRNGKey(seed))
+        print(f"[pagerank] algo=counts n={g.n} shards={res.shards} "
+              f"rounds={res.rounds} lane_cap={res.lane_cap} "
+              f"a2a_bytes={res.a2a_bytes_total} overflow={res.overflow}")
+        pi = res.pi
+    elif algo == "improved":
+        res = distributed_improved_pagerank(g, eps, walks_per_node,
+                                            jax.random.PRNGKey(seed))
+        print(f"[pagerank] algo=improved n={g.n} shards={res.shards} "
+              f"lam={res.lam} eta={res.eta} ell={res.ell} "
+              f"rounds={res.rounds} (p1={res.phase1_rounds} "
+              f"report={res.report_rounds} p2={res.phase2_rounds} "
+              f"p3={res.phase3_rounds} tail={res.tail_rounds})")
+        print(f"[pagerank] coupons created={res.coupons_created} "
+              f"used={res.coupons_used} exhausted_walks="
+              f"{res.exhausted_walks} tail_walks={res.tail_walks}")
+        print(f"[pagerank] wire by phase: {res.a2a_bytes_by_phase} "
+              f"dropped={res.dropped} waited={res.waited}")
+        pi = res.pi
+    else:
+        raise ValueError(f"unknown algo {algo!r}")
+    _report_accuracy(pi, g, eps)
     return pi
 
 
@@ -87,11 +152,13 @@ def main():
     ap.add_argument("--walks", type=int, default=64)
     ap.add_argument("--graph", default="erdos_renyi",
                     choices=sorted(GENERATORS))
+    ap.add_argument("--algo", default="walks",
+                    choices=["walks", "counts", "improved"])
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
     args = ap.parse_args()
     run(args.n, args.eps, args.walks, args.graph, args.checkpoint_dir,
-        args.fail_at)
+        args.fail_at, algo=args.algo)
 
 
 if __name__ == "__main__":

@@ -137,7 +137,7 @@ def moe_forward_sharded(p, x, cfg, rules) -> Tuple[jnp.ndarray, jnp.ndarray]:
     dispatch whose cross-data gathers lowered to per-layer all-gathers of
     the entire token buffer (measured 16x FLOP redundancy or 8x collective
     blowup — §Perf dbrx hillclimb)."""
-    from jax import shard_map as _shard_map
+    from repro.core.routing import shard_map as _shard_map
     from jax.sharding import PartitionSpec as P
 
     mesh = rules.mesh
@@ -178,8 +178,7 @@ def moe_forward_sharded(p, x, cfg, rules) -> Tuple[jnp.ndarray, jnp.ndarray]:
     fn = _shard_map(local_fn, mesh=mesh,
                     in_specs=(P(dp_spec, None, None), P(None, None))
                     + w_specs,
-                    out_specs=(P(dp_spec, None, None), P()),
-                    check_vma=False)
+                    out_specs=(P(dp_spec, None, None), P()))
     out, aux = fn(x, p["router"], *w_args)
     if "shared" in p:
         out = out + mlp_forward(p["shared"], x, cfg.mlp)
