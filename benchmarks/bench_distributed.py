@@ -1,20 +1,29 @@
 """Distributed engine scaling: Algorithm 1 (walk-routing and
-count-aggregated wire) vs Algorithm 2 (sharded IMPROVED-PAGERANK).
+count-aggregated wire) vs Algorithm 2 (sharded IMPROVED-PAGERANK) vs
+Section 5 (sharded directed/LOCAL).
 
 Reproduces the §Perf hillclimb measurements: all_to_all payload and round
-counts to full termination for all three engines at 2/8 shards and two
-walk counts (subprocess per shard count — device count is process-global).
-Emitted columns per engine: wall time, total rounds, phase-round breakdown
-(Algorithm 2 only: p1/report/p2/p3/tail), and wire volume (total
-all_to_all payload bytes, by phase for Algorithm 2).
+counts to full termination for all four engines at 2/8 shards (subprocess
+per shard count — device count is process-global). The three undirected
+engines run on an Erdos–Renyi graph at two walk counts; the Section-5
+engine runs on a power-law directed web at K=50 only (its uniform LOCAL
+pools scale ~K*log^2 n, so larger K mostly benchmarks buffer sorts), next
+to an Algorithm-1 walk run on the SAME directed graph for the directed
+round-speedup column. Emitted columns per engine: wall time, total rounds,
+phase-round breakdown (3-phase engines: p1/report/p2/p3/tail), and wire
+volume (total all_to_all payload bytes, by phase for the 3-phase engines).
+
+`--json [PATH]` additionally writes the raw rows to a machine-readable
+artifact (default BENCH_distributed.json) so the perf trajectory can be
+tracked across PRs.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
 import sys
-import textwrap
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -22,8 +31,18 @@ _CODE = """
 import json, time, jax
 from repro.core.distributed import distributed_pagerank
 from repro.core.distributed_counts import distributed_pagerank_counts
+from repro.core.distributed_directed import distributed_directed_pagerank
 from repro.core.distributed_improved import distributed_improved_pagerank
-from repro.graphs import erdos_renyi
+from repro.graphs import directed_web, erdos_renyi
+
+def phases(r):
+    return dict(p1=r.phase1_rounds, report=r.report_rounds,
+                p2=r.phase2_rounds, p3=r.phase3_rounds, tail=r.tail_rounds)
+
+def coupons(r):
+    return dict(created=r.coupons_created, used=r.coupons_used,
+                exhausted=r.exhausted_walks)
+
 g = erdos_renyi(200, 6.0, seed=3)
 out = []
 for K in (100, 400):
@@ -43,15 +62,29 @@ for K in (100, 400):
                     count_us=tc * 1e6,
                     imp_a2a=ri.a2a_bytes_total, imp_rounds=ri.rounds,
                     imp_us=ti * 1e6,
-                    imp_phases=dict(p1=ri.phase1_rounds,
-                                    report=ri.report_rounds,
-                                    p2=ri.phase2_rounds,
-                                    p3=ri.phase3_rounds,
-                                    tail=ri.tail_rounds),
-                    imp_wire=ri.a2a_bytes_by_phase,
-                    imp_coupons=dict(created=ri.coupons_created,
-                                     used=ri.coupons_used,
-                                     exhausted=ri.exhausted_walks)))
+                    imp_phases=phases(ri), imp_wire=ri.a2a_bytes_by_phase,
+                    imp_coupons=coupons(ri)))
+
+# Section 5 on a directed power-law web, vs Algorithm 1 on the same graph
+# (the walk engine gets the worst-case W buffer: directed hubs overflow
+# the 2*W/P CONGEST sizing)
+gd = directed_web(200, 6.0, seed=3)
+K = 50
+t0 = time.time()
+rdw = distributed_pagerank(gd, 0.2, K, jax.random.PRNGKey(3),
+                           cap=gd.n * K + 8 * 64)
+tdw = time.time() - t0
+t0 = time.time()
+rd = distributed_directed_pagerank(gd, 0.2, K, jax.random.PRNGKey(4))
+td = time.time() - t0
+out.append(dict(K=K, shards=rd.shards, directed=True,
+                walk_a2a=rdw.a2a_bytes_total, walk_rounds=rdw.rounds,
+                walk_us=tdw * 1e6,
+                dir_a2a=rd.a2a_bytes_total, dir_rounds=rd.rounds,
+                dir_us=td * 1e6,
+                dir_phases=phases(rd), dir_wire=rd.a2a_bytes_by_phase,
+                dir_coupons=coupons(rd),
+                dir_budget=rd.uniform_budget, dir_dropped=rd.dropped))
 print(json.dumps(out))
 """
 
@@ -63,7 +96,7 @@ def run(shard_counts=(2, 8)):
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
         env["PYTHONPATH"] = SRC
         res = subprocess.run([sys.executable, "-c", _CODE], env=env,
-                             capture_output=True, text=True, timeout=1800)
+                             capture_output=True, text=True, timeout=3600)
         if res.returncode != 0:
             rows.append(dict(shards=p, error=res.stderr[-200:]))
             continue
@@ -71,30 +104,65 @@ def run(shard_counts=(2, 8)):
     return rows
 
 
-def main():
-    rows = run()
+def _phase_str(ph):
+    return "/".join(f"{n}={ph[n]}" for n in
+                    ("p1", "report", "p2", "p3", "tail"))
+
+
+def _wire_str(wire):
+    return ";".join(f"{n}_bytes={v}" for n, v in sorted(wire.items()))
+
+
+def report(rows):
     print("name,us_per_call,derived")
     for r in rows:
         if "error" in r:
             print(f"dist_shards{r['shards']},0,ERROR={r['error'][:80]}")
             continue
         p, k = r["shards"], r["K"]
+        if r.get("directed"):
+            cp = r["dir_coupons"]
+            print(f"dist_dirwalk_P{p}_K{k},{r['walk_us']:.0f},"
+                  f"rounds={r['walk_rounds']};a2a_bytes={r['walk_a2a']}")
+            print(f"dist_directed_P{p}_K{k},{r['dir_us']:.0f},"
+                  f"rounds={r['dir_rounds']};"
+                  f"phases={_phase_str(r['dir_phases'])};"
+                  f"{_wire_str(r['dir_wire'])};"
+                  f"coupons_used={cp['used']}/{cp['created']};"
+                  f"exhausted={cp['exhausted']};budget={r['dir_budget']};"
+                  f"dropped={r['dir_dropped']};round_speedup="
+                  f"{r['walk_rounds'] / max(r['dir_rounds'], 1):.2f}x")
+            continue
         print(f"dist_walk_P{p}_K{k},{r['walk_us']:.0f},"
               f"rounds={r['walk_rounds']};a2a_bytes={r['walk_a2a']}")
         print(f"dist_count_P{p}_K{k},{r['count_us']:.0f},"
               f"rounds={r['count_rounds']};a2a_bytes={r['count_a2a']};"
               f"reduction={r['walk_a2a']/max(r['count_a2a'],1):.1f}x")
-        ph = r["imp_phases"]
-        phase_s = "/".join(f"{n}={ph[n]}" for n in
-                           ("p1", "report", "p2", "p3", "tail"))
-        wire_s = ";".join(f"{n}_bytes={v}"
-                          for n, v in sorted(r["imp_wire"].items()))
         cp = r["imp_coupons"]
         print(f"dist_improved_P{p}_K{k},{r['imp_us']:.0f},"
-              f"rounds={r['imp_rounds']};phases={phase_s};{wire_s};"
+              f"rounds={r['imp_rounds']};"
+              f"phases={_phase_str(r['imp_phases'])};"
+              f"{_wire_str(r['imp_wire'])};"
               f"coupons_used={cp['used']}/{cp['created']};"
               f"exhausted={cp['exhausted']};"
               f"round_speedup={r['walk_rounds']/max(r['imp_rounds'],1):.2f}x")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_distributed.json",
+                    default=None, metavar="PATH",
+                    help="also write the raw rows (rounds, wire volume, "
+                         "wall time per engine) to a JSON artifact")
+    ap.add_argument("--shards", type=int, nargs="+", default=[2, 8])
+    args = ap.parse_args(argv)
+    rows = run(tuple(args.shards))
+    report(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(dict(schema=1, bench="distributed_engines",
+                           shard_counts=args.shards, rows=rows), f, indent=2)
+        print(f"[bench] wrote {args.json} ({len(rows)} rows)")
     return rows
 
 

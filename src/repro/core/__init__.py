@@ -12,12 +12,15 @@ Public API:
                                             count-aggregated wire
   distributed_improved_pagerank           — shard_map multi-device engine
                                             (Algorithm 2, three phases)
+  distributed_directed_pagerank           — shard_map multi-device engine
+                                            (Section 5 directed/LOCAL,
+                                            uniform coupon budgets)
 
 The distributed engines live in their own modules (not imported here) so
 that `import repro.core` stays light for single-device workloads:
 `repro.core.distributed`, `repro.core.distributed_counts`,
-`repro.core.distributed_improved`, with the shared lane/routing machinery
-in `repro.core.routing`.
+`repro.core.distributed_improved`, `repro.core.distributed_directed`,
+with the shared lane/routing machinery in `repro.core.routing`.
 """
 from repro.core.graph import CSRGraph, from_edges, exact_pagerank
 from repro.core.power_iteration import power_iteration

@@ -1,0 +1,118 @@
+"""Multi-device Section-5 engine — directed graphs in the LOCAL model.
+
+This fills the last cell of the ROADMAP engine matrix: the shard_map
+realization of the paper's Section-5 extension of IMPROVED-PAGERANK to
+directed graphs. It shares the entire 3-phase machinery with the
+Algorithm-2 engine (`distributed_improved._run_three_phase`, built on the
+lane/route/merge/exchange primitives in `routing.py`); what Section 5
+changes is the *budget policy* and the *round budget*, not the supersteps:
+
+  Uniform coupon budgets. On a directed graph there is no Lemma-2 bound
+    relating walk visits to d(v) (short PageRank walks are not near
+    degree-stationary), so Phase 1 cannot size vertex v's pool as
+    d(v)*eta. Every node instead precomputes the same
+    eta*ceil(log n) short walks (`coupon_pool_sizes(...,
+    degree_proportional=False)`), the LOCAL-model analogue of the paper's
+    "polynomially many coupons per node" — LOCAL rounds allow unbounded
+    messages, so overprovisioning costs no rounds; our fixed-capacity
+    buffers charge it to memory and all_to_all payload instead, which the
+    telemetry reports.
+
+  Longer short walks. With uniform budgets the optimal split of the
+    length-ell long walk is lam = ceil(sqrt(log n / eps)) — the Section-5
+    round bound O(sqrt(log n / eps)) — instead of the CONGEST
+    lam = ceil(sqrt(log n)).
+
+  Directed out-edges only, dangling resets. Walks move along the CSR
+    out-edges exactly as written (nothing is symmetrized), and a walk
+    arriving at a dangling node (out-degree 0) takes an immediate reset:
+    `routing.advance_owned` terminates it on the spot, the same
+    convention as `graph.transition_matrix` (dangling row = uniform
+    teleport), so the estimator stays consistent with power iteration.
+
+Phase structure, wire accounting, conservation counters (`dropped` must
+stay 0), the exhaustion fallback to naive distributed walking, and the
+psum-reduced estimator pi = zeta * eps/(nK) are identical to
+`distributed_improved.py` — see that module for the superstep details.
+Statistical target: `improved_pagerank.directed_local_pagerank` (the
+single-device Section-5 engine) and power iteration on directed fixtures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.distributed import AXIS
+from repro.core.distributed_improved import (ImprovedDistResult,
+                                             _run_three_phase)
+from repro.core.graph import CSRGraph
+from repro.core.improved_pagerank import coupon_pool_sizes
+from repro.core.simple_pagerank import walks_per_node_for
+
+
+@dataclasses.dataclass
+class DirectedDistResult(ImprovedDistResult):
+    """ImprovedDistResult + Section-5 telemetry."""
+
+    uniform_budget: int = 0   # coupons per node (every node gets the same)
+    dangling_nodes: int = 0   # out-degree-0 vertices (immediate reset)
+
+
+def distributed_directed_pagerank(
+    graph: CSRGraph,
+    eps: float,
+    walks_per_node: Optional[int] = None,
+    key: Optional[jnp.ndarray] = None,
+    *,
+    mesh: Optional[Mesh] = None,
+    lam: Optional[int] = None,
+    eta: Optional[int] = None,
+    eta_safety: float = 2.0,
+    cap1: Optional[int] = None,
+    cap2: Optional[int] = None,
+    route_cap1: Optional[int] = None,
+    route_cap2: Optional[int] = None,
+    rep_cap: Optional[int] = None,
+    max_rounds: int = 100_000,
+    bandwidth_bits: Optional[int] = None,
+) -> DirectedDistResult:
+    """Run the Section-5 directed/LOCAL algorithm across all devices of
+    `mesh` (default: all devices)."""
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()), (AXIS,))
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n = graph.n
+    K = walks_per_node or walks_per_node_for(n, eps)
+    log_n = math.log(max(n, 2))
+    if lam is None:
+        lam = max(1, int(math.ceil(math.sqrt(log_n / eps))))
+    ell = max(lam + 1, int(math.ceil(log_n / eps)))
+    eta, pool_np = coupon_pool_sizes(graph, eps, K, lam, eta=eta,
+                                     eta_safety=eta_safety,
+                                     degree_proportional=False, ell=ell)
+    # LOCAL-model buffer sizing: a directed hub can attract essentially the
+    # whole coupon pool (resp. every long walk) in one round — there is no
+    # Lemma-2 degree bound tying load to d(v), and the `distributed.py`
+    # 2*W/P rule that serves the CONGEST engines overflows (drops) on
+    # power-law webs. LOCAL charges unbounded per-round communication to
+    # capacity instead of rounds, so default to worst-case buffers: every
+    # coupon / walk co-resident on one shard.
+    shards = int(mesh.devices.size)
+    if cap1 is None:
+        cap1 = int(pool_np.sum()) + shards * 64
+    if cap2 is None:
+        cap2 = n * K + shards * 64
+    return _run_three_phase(
+        graph, eps, K, key, mesh, pool_np=pool_np, eta=int(eta),
+        lam=int(lam), ell=int(ell), cap1=cap1, cap2=cap2,
+        route_cap1=route_cap1, route_cap2=route_cap2, rep_cap=rep_cap,
+        max_rounds=max_rounds, bandwidth_bits=bandwidth_bits,
+        result_cls=DirectedDistResult,
+        uniform_budget=int(pool_np[0]),
+        dangling_nodes=int((np.asarray(graph.out_deg) == 0).sum()))

@@ -49,6 +49,12 @@ stay 0 for an exact run. Sizing rule, per phase with W resident walks:
 `cap >= max(2*W/P, W_loc_max) + P*64` with `route_cap >= W/P` (mirrors
 `distributed.py`; the `W_loc_max` term covers degree-skewed Phase 1
 starts).
+
+The phases only ever see a per-node pool-size vector, so the whole driver
+lives in the budget-policy-agnostic `_run_three_phase`; this module's
+public `distributed_improved_pagerank` feeds it Lemma-2 degree-proportional
+pools, and `distributed_directed.distributed_directed_pagerank` feeds it
+the Section-5 uniform/LOCAL pools.
 """
 from __future__ import annotations
 
@@ -381,7 +387,6 @@ def distributed_improved_pagerank(
     """Run Algorithm 2 across all devices of `mesh` (default: all devices)."""
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), (AXIS,))
-    shards = int(mesh.devices.size)
     key = key if key is not None else jax.random.PRNGKey(0)
     n = graph.n
     K = walks_per_node or walks_per_node_for(n, eps)
@@ -389,6 +394,49 @@ def distributed_improved_pagerank(
     if lam is None:
         lam = max(1, int(math.ceil(math.sqrt(log_n))))
     ell = max(lam + 1, int(math.ceil(log_n / eps)))
+    eta, pool_np = coupon_pool_sizes(graph, eps, K, lam, eta=eta,
+                                     eta_safety=eta_safety)
+    return _run_three_phase(
+        graph, eps, K, key, mesh, pool_np=pool_np, eta=int(eta),
+        lam=int(lam), ell=int(ell), cap1=cap1, cap2=cap2,
+        route_cap1=route_cap1, route_cap2=route_cap2, rep_cap=rep_cap,
+        max_rounds=max_rounds, bandwidth_bits=bandwidth_bits)
+
+
+def _run_three_phase(
+    graph: CSRGraph,
+    eps: float,
+    K: int,
+    key: jnp.ndarray,
+    mesh: Mesh,
+    *,
+    pool_np: np.ndarray,
+    eta: int,
+    lam: int,
+    ell: int,
+    cap1: Optional[int] = None,
+    cap2: Optional[int] = None,
+    route_cap1: Optional[int] = None,
+    route_cap2: Optional[int] = None,
+    rep_cap: Optional[int] = None,
+    max_rounds: int = 100_000,
+    bandwidth_bits: Optional[int] = None,
+    result_cls: type = ImprovedDistResult,
+    **extra_fields,
+):
+    """Budget-policy-agnostic 3-phase stitching driver.
+
+    The whole engine — Phase-1 short walks, the closing report exchange,
+    Phase-2 stitching, Phase-3 replay counting, the naive tail, and the
+    psum-reduced estimator — only ever sees the per-node pool-size vector
+    `pool_np`, never the policy that produced it. `distributed_improved_
+    pagerank` (Lemma 2, d(v)*eta) and `distributed_directed.distributed_
+    directed_pagerank` (Section 5, uniform budgets in the LOCAL model) are
+    thin frontends over this core. `result_cls`/`extra_fields` let a
+    frontend return a telemetry subclass of ImprovedDistResult.
+    """
+    shards = int(mesh.devices.size)
+    n = graph.n
 
     sg = shard_graph(graph, shards)
     n_loc = sg.n_loc
@@ -398,8 +446,6 @@ def distributed_improved_pagerank(
     sg_dg = jax.device_put(sg.out_deg, spec)
 
     # ---- coupon pool layout: contiguous per shard, padded to S_loc_pad ----
-    eta, pool_np = coupon_pool_sizes(graph, eps, K, lam, eta=eta,
-                                     eta_safety=eta_safety)
     pool_pad = np.zeros(sg.n_pad, dtype=np.int64)
     pool_pad[:n] = pool_np
     psize_sh = pool_pad.reshape(shards, n_loc)
@@ -603,7 +649,7 @@ def distributed_improved_pagerank(
     report = CongestReport(traces=traces, n=n,
                            bandwidth_bits=bandwidth_bits
                            or default_bandwidth(n))
-    return ImprovedDistResult(
+    return result_cls(
         zeta=zeta, pi=pi, shards=shards, walks_per_node=K, eps=eps,
         lam=int(lam), eta=int(eta), ell=int(ell), rounds=rounds,
         phase1_rounds=phase1_rounds, report_rounds=report_rounds,
@@ -615,4 +661,4 @@ def distributed_improved_pagerank(
         dropped=dropped_total, waited=waited_total,
         a2a_bytes_total=sum(wire.values()), a2a_bytes_by_phase=wire,
         phase2_records=phase2_records, report=report,
-        total_visits=int(total_visits))
+        total_visits=int(total_visits), **extra_fields)

@@ -63,23 +63,46 @@ class ImprovedResult(PageRankResult):
 
 def coupon_pool_sizes(graph: CSRGraph, eps: float, walks_per_node: int,
                       lam: int, *, eta: Optional[int] = None,
-                      eta_safety: float = 2.0) -> Tuple[int, np.ndarray]:
-    """Degree-proportional Phase-1 pool sizes: d(v)*eta coupons per node.
+                      eta_safety: float = 2.0,
+                      degree_proportional: bool = True,
+                      ell: Optional[int] = None) -> Tuple[int, np.ndarray]:
+    """Phase-1 coupon pool sizes, shared by every Algorithm-2-family engine.
 
-    eta is sized from the expected stitches-per-node (Lemma 2 in spirit):
-    a long walk has expected length 1/eps => ~1/(eps*lam)+1 stitches;
-    connectors land ∝ d(v)/Σd (undirected near-stationarity). The paper's
-    Theta(log^3 n/eps) overprovisions for whp bounds; we size for the
-    expectation ×safety and keep the naive-walk fallback for the (counted)
-    exhaustion tail. Returns (eta, pool_size[n]); isolated vertices get one
-    coupon so every request resolves deterministically.
+    Degree-proportional (undirected/CONGEST, Lemma 2): d(v)*eta coupons per
+    node. eta is sized from the expected stitches-per-node: a long walk has
+    expected length 1/eps => ~1/(eps*lam)+1 stitches; connectors land
+    ∝ d(v)/Σd (undirected near-stationarity). The paper's Theta(log^3 n/eps)
+    overprovisions for whp bounds; we size for the expectation ×safety and
+    keep the naive-walk fallback for the (counted) exhaustion tail.
+    Isolated vertices get one coupon so every request resolves
+    deterministically.
+
+    Uniform (directed/LOCAL, Section 5: `degree_proportional=False`): no
+    degree bound relates visits to d(v) on a directed graph, so every node
+    gets the same eta*ceil(log n) coupons, with eta = ceil(eta_safety *
+    K*ell/lam) — K*ell/lam is the per-node stitch demand if the whole
+    walk load concentrated ∝ 1/n, and the extra ceil(log n) factor covers
+    connector skew (the paper sends polynomially many coupons; LOCAL
+    bandwidth is free, our buffers are not). Requires `ell` (the whp walk
+    length cap) unless `eta` is given explicitly.
+
+    Returns (eta, pool_size[n]).
     """
     deg_np = np.asarray(graph.out_deg)
+    n = graph.n
+    if degree_proportional:
+        if eta is None:
+            exp_stitches = n * walks_per_node * (1.0 / (eps * lam) + 1.0)
+            eta = max(1, int(math.ceil(
+                eta_safety * exp_stitches / max(deg_np.sum(), 1))))
+        return int(eta), np.maximum(deg_np.astype(np.int64) * eta, 1)
     if eta is None:
-        exp_stitches = graph.n * walks_per_node * (1.0 / (eps * lam) + 1.0)
-        eta = max(1, int(math.ceil(
-            eta_safety * exp_stitches / max(deg_np.sum(), 1))))
-    return int(eta), np.maximum(deg_np.astype(np.int64) * eta, 1)
+        if ell is None:
+            raise ValueError("uniform pool sizing needs ell (or explicit eta)")
+        eta = max(1, int(math.ceil(eta_safety * walks_per_node * ell / lam)))
+    log_n = math.log(max(n, 2))
+    per_node = int(eta) * max(1, int(math.ceil(log_n)))
+    return int(eta), np.full(n, per_node, dtype=np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -203,15 +226,9 @@ def improved_pagerank(
                                              else log_n / eps))))
     ell = max(lam + 1, int(math.ceil(log_n / eps)))
 
-    deg_np = np.asarray(graph.out_deg)
-    if degree_proportional:
-        eta, pool_size_np = coupon_pool_sizes(graph, eps, K, lam, eta=eta,
-                                              eta_safety=eta_safety)
-    else:
-        # Section 5: uniform (polynomial) pool per node.
-        if eta is None:
-            eta = max(1, int(math.ceil(eta_safety * K * ell / lam)))
-        pool_size_np = np.full(n, eta * max(1, int(math.ceil(log_n))), dtype=np.int64)
+    eta, pool_size_np = coupon_pool_sizes(
+        graph, eps, K, lam, eta=eta, eta_safety=eta_safety,
+        degree_proportional=degree_proportional, ell=ell)
 
     pool_start_np = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(pool_size_np, out=pool_start_np[1:])

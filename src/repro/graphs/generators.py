@@ -75,9 +75,13 @@ def random_regular(n: int, d: int, seed: int = 0) -> CSRGraph:
     return from_edges(src[keep], dst[keep], n, undirected=True)
 
 
-def directed_web(n: int, avg_out_deg: float = 6.0, alpha: float = 1.8, seed: int = 0) -> CSRGraph:
+def directed_web(n: int, avg_out_deg: float = 6.0, seed: int = 0, *,
+                 alpha: float = 1.8) -> CSRGraph:
     """Directed web-like graph: power-law *in*-degree attractiveness, every
-    vertex has out-degree >= 1 (no dangling). Exercises Section 5."""
+    vertex has out-degree >= 1 (no dangling). Exercises Section 5.
+
+    Signature matches the launch driver's positional (n, avg_deg, seed)
+    generator convention; the power-law exponent is keyword-only."""
     rng = np.random.default_rng(seed)
     # attractiveness ∝ (rank+1)^{-alpha}
     attract = (np.arange(n) + 1.0) ** (-alpha)
@@ -98,7 +102,7 @@ def directed_web(n: int, avg_out_deg: float = 6.0, alpha: float = 1.8, seed: int
 def doc_link_graph(n_docs: int, seed: int = 0) -> CSRGraph:
     """Synthetic document citation/hyperlink graph for the data-weighting
     integration example (directed, power-law authority)."""
-    return directed_web(n_docs, avg_out_deg=8.0, alpha=1.5, seed=seed)
+    return directed_web(n_docs, avg_out_deg=8.0, seed=seed, alpha=1.5)
 
 
 GENERATORS = {

@@ -14,20 +14,29 @@ Engine selection (`--algo`):
             sqrt(log n)-length short-walk pre-computation, coupon
             stitching with static connector exchanges, owner-shard visit
             counting (see `repro.core.distributed_improved`).
+  directed  Section 5 (directed/LOCAL), the same three-phase engine with
+            uniform per-node coupon budgets, lam = sqrt(log n / eps)
+            short walks, dangling-node resets, and worst-case (LOCAL)
+            buffer sizing (see `repro.core.distributed_directed`).
+            Pair it with `--graph directed_web` to exercise a power-law
+            directed fixture.
 
 Every run validates against power iteration (L1 and top-10 overlap).
 
-Telemetry printed for `--algo improved` (also available on the returned
-`ImprovedDistResult`):
+Telemetry printed for `--algo improved` and `--algo directed` (also
+available on the returned `ImprovedDistResult`/`DirectedDistResult`):
   phase rounds   per-phase superstep counts: phase1 (short walks), report
                  (coupon summaries to home shards), phase2 (stitching),
                  phase3 (replay counting), tail (naive fallback) — their
                  sum is the engine's total round count, the quantity the
-                 paper bounds by O(sqrt(log n)/eps).
+                 paper bounds by O(sqrt(log n)/eps) undirected resp.
+                 O(sqrt(log n / eps)) directed.
   coupons        created vs used pool sizes and exhausted walks (pool
                  ran dry -> naive fallback).
   wire           all_to_all payload bytes by phase, plus `dropped` (buffer
                  overflows, must be 0) and `waited` (lane carry-overs).
+  budget         (`directed` only) the uniform per-node coupon budget and
+                 the dangling-node count (out-degree 0, immediate reset).
 """
 from __future__ import annotations
 
@@ -44,6 +53,7 @@ from repro.core.distributed import (AXIS, DistState, _make_superstep,
                                     shard_graph, state_from_host,
                                     state_to_host)
 from repro.core.distributed_counts import distributed_pagerank_counts
+from repro.core.distributed_directed import distributed_directed_pagerank
 from repro.core.distributed_improved import distributed_improved_pagerank
 from repro.graphs import GENERATORS
 from repro.runtime import FailureSchedule, Supervisor
@@ -125,10 +135,11 @@ def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
               f"rounds={res.rounds} lane_cap={res.lane_cap} "
               f"a2a_bytes={res.a2a_bytes_total} overflow={res.overflow}")
         pi = res.pi
-    elif algo == "improved":
-        res = distributed_improved_pagerank(g, eps, walks_per_node,
-                                            jax.random.PRNGKey(seed))
-        print(f"[pagerank] algo=improved n={g.n} shards={res.shards} "
+    elif algo in ("improved", "directed"):
+        engine = (distributed_improved_pagerank if algo == "improved"
+                  else distributed_directed_pagerank)
+        res = engine(g, eps, walks_per_node, jax.random.PRNGKey(seed))
+        print(f"[pagerank] algo={algo} n={g.n} shards={res.shards} "
               f"lam={res.lam} eta={res.eta} ell={res.ell} "
               f"rounds={res.rounds} (p1={res.phase1_rounds} "
               f"report={res.report_rounds} p2={res.phase2_rounds} "
@@ -138,6 +149,9 @@ def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
               f"{res.exhausted_walks} tail_walks={res.tail_walks}")
         print(f"[pagerank] wire by phase: {res.a2a_bytes_by_phase} "
               f"dropped={res.dropped} waited={res.waited}")
+        if algo == "directed":
+            print(f"[pagerank] uniform budget={res.uniform_budget} "
+                  f"coupons/node dangling_nodes={res.dangling_nodes}")
         pi = res.pi
     else:
         raise ValueError(f"unknown algo {algo!r}")
@@ -153,7 +167,7 @@ def main():
     ap.add_argument("--graph", default="erdos_renyi",
                     choices=sorted(GENERATORS))
     ap.add_argument("--algo", default="walks",
-                    choices=["walks", "counts", "improved"])
+                    choices=["walks", "counts", "improved", "directed"])
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
     args = ap.parse_args()

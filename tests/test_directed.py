@@ -1,0 +1,169 @@
+"""Section-5 directed edge cases: dangling nodes, SCC structure, and the
+uniform (LOCAL-model) coupon budgets — single-device and sharded."""
+import math
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (directed_local_pagerank, l1_error, normalized,
+                        power_iteration)
+from repro.core.graph import from_edges
+from repro.core.improved_pagerank import coupon_pool_sizes
+from repro.graphs import directed_web
+
+from conftest import run_forced_devices
+
+EPS = 0.25
+
+# exec-able source (conftest SMALL_GRAPHS_SRC pattern) so the in-process
+# tests and the distributed subprocess build the IDENTICAL graph
+DANGLING_WEB_SRC = """
+import numpy as np
+from repro.core.graph import from_edges
+
+def dangling_web(n=32, n_sinks=3, seed=0):
+    '''Directed graph where the last `n_sinks` vertices have no out-edges
+    (walks arriving there take an immediate reset).'''
+    rng = np.random.default_rng(seed)
+    src_l, dst_l = [], []
+    for v in range(n - n_sinks):
+        for u in rng.choice(n, size=3, replace=False):
+            if u != v:
+                src_l.append(v)
+                dst_l.append(int(u))
+    g = from_edges(np.array(src_l), np.array(dst_l), n, undirected=False)
+    deg = np.asarray(g.out_deg)
+    assert (deg[-n_sinks:] == 0).all() and (deg[:-n_sinks] > 0).all()
+    return g
+"""
+_ns = {}
+exec(DANGLING_WEB_SRC, _ns)
+_dangling_web = _ns["dangling_web"]
+
+
+# ---------------------------------------------------------------------------
+# uniform (Section-5) coupon budgets
+# ---------------------------------------------------------------------------
+
+def test_uniform_pool_sizes_are_uniform():
+    g = directed_web(64, 5.0, seed=1)
+    eta, pool = coupon_pool_sizes(g, 0.2, 100, 5, degree_proportional=False,
+                                  ell=23)
+    assert (pool == pool[0]).all()            # same budget for every node
+    assert pool.shape == (64,)
+    assert eta == math.ceil(2.0 * 100 * 23 / 5)
+    assert pool[0] == eta * math.ceil(math.log(64))
+
+
+def test_uniform_pool_explicit_eta_and_scaling():
+    g = directed_web(64, 5.0, seed=1)
+    _, pool7 = coupon_pool_sizes(g, 0.2, 100, 5, eta=7,
+                                 degree_proportional=False)
+    assert (pool7 == 7 * math.ceil(math.log(64))).all()
+    eta1, _ = coupon_pool_sizes(g, 0.2, 100, 5, degree_proportional=False,
+                                ell=23)
+    eta2, _ = coupon_pool_sizes(g, 0.2, 200, 5, degree_proportional=False,
+                                ell=23)
+    assert eta2 == 2 * eta1                   # budget scales with walk load
+    with pytest.raises(ValueError):           # needs ell unless eta given
+        coupon_pool_sizes(g, 0.2, 100, 5, degree_proportional=False)
+
+
+def test_degree_proportional_pools_unchanged():
+    """The shared helper must keep the Lemma-2 behavior for Algorithm 2."""
+    g = directed_web(64, 5.0, seed=1)
+    eta, pool = coupon_pool_sizes(g, 0.2, 100, 3)
+    deg = np.asarray(g.out_deg).astype(np.int64)
+    np.testing.assert_array_equal(pool, np.maximum(deg * eta, 1))
+
+
+# ---------------------------------------------------------------------------
+# dangling nodes: immediate reset, consistent with the power-iteration
+# convention (dangling row = uniform teleport)
+# ---------------------------------------------------------------------------
+
+def test_dangling_nodes_single_device():
+    g = _dangling_web()
+    pi_ref, _, _ = power_iteration(g, EPS)
+    res = directed_local_pagerank(g, EPS, walks_per_node=200,
+                                  key=jax.random.PRNGKey(2))
+    assert l1_error(normalized(res.pi), pi_ref) < 0.15
+    # early resets at sinks: strictly fewer visits than the no-dangling
+    # expectation nK/eps, but the estimator must stay a distribution
+    assert int(res.zeta.sum()) < g.n * 200 / EPS
+    assert 0.0 < float(res.pi.sum()) <= 1.05
+
+
+# ---------------------------------------------------------------------------
+# SCC structure
+# ---------------------------------------------------------------------------
+
+def test_single_scc_cycle_is_uniform():
+    n = 24
+    v = np.arange(n)
+    g = from_edges(v, (v + 1) % n, n, undirected=False)
+    pi_ref, _, _ = power_iteration(g, EPS)
+    res = directed_local_pagerank(g, EPS, walks_per_node=200,
+                                  key=jax.random.PRNGKey(3))
+    assert l1_error(normalized(res.pi), pi_ref) < 0.15
+    np.testing.assert_allclose(np.asarray(res.pi), 1.0 / n, rtol=0.35)
+
+
+def test_multi_scc_mass_flows_downstream():
+    """Two cycles A -> B joined by a one-way bridge: the downstream SCC
+    must end up with more stationary mass, and the engine must agree with
+    power iteration about it."""
+    k = 12
+    v = np.arange(k)
+    src = np.concatenate([v, k + v, [0]])            # A-cycle, B-cycle,
+    dst = np.concatenate([(v + 1) % k, k + (v + 1) % k, [k]])  # bridge A0->B0
+    g = from_edges(src, dst, 2 * k, undirected=False)
+    pi_ref, _, _ = power_iteration(g, EPS)
+    res = directed_local_pagerank(g, EPS, walks_per_node=300,
+                                  key=jax.random.PRNGKey(4))
+    pi = np.asarray(normalized(res.pi))
+    assert l1_error(pi, pi_ref) < 0.15
+    assert pi[k:].sum() > pi[:k].sum()               # downstream-heavy
+    assert np.asarray(pi_ref)[k:].sum() > np.asarray(pi_ref)[:k].sum()
+
+
+# ---------------------------------------------------------------------------
+# sharded Section-5 engine on a dangling directed graph (subprocess: the
+# device count is process-global); honors REPRO_TEST_DEVICES like the
+# conformance suite so the 1-device CI leg covers the single-shard path
+# ---------------------------------------------------------------------------
+
+def test_distributed_directed_dangling():
+    code = textwrap.dedent("""
+        import json, jax
+        from repro.core import (directed_local_pagerank, l1_error,
+                                normalized, power_iteration)
+        from repro.core.distributed_directed import (
+            distributed_directed_pagerank)
+    """) + DANGLING_WEB_SRC + textwrap.dedent("""
+        g = dangling_web()
+        pi_ref, _, _ = power_iteration(g, 0.25)
+        rd = distributed_directed_pagerank(g, 0.25, 60,
+                                           jax.random.PRNGKey(5))
+        rs = directed_local_pagerank(g, 0.25, walks_per_node=60,
+                                     key=jax.random.PRNGKey(6))
+        print(json.dumps(dict(
+            n=g.n, W=g.n * 60,
+            l1=l1_error(normalized(rd.pi), pi_ref),
+            l1_cross=l1_error(normalized(rd.pi), normalized(rs.pi)),
+            dropped=rd.dropped, dangling=rd.dangling_nodes,
+            budget=rd.uniform_budget, created=rd.coupons_created,
+            conserved=rd.terminated_by_coupon + rd.tail_walks == g.n * 60,
+            zeta=int(rd.zeta.sum()))))
+    """)
+    r = run_forced_devices(code, timeout=1200)
+    assert r["dangling"] == 3                      # telemetry sees the sinks
+    assert r["dropped"] == 0
+    assert r["conserved"]
+    assert r["created"] == r["n"] * r["budget"]    # uniform budgets
+    assert r["l1"] < 0.15, r["l1"]
+    assert r["l1_cross"] < 0.3, r["l1_cross"]
+    # dangling resets shorten walks: visit mass strictly below nK/eps
+    assert r["zeta"] < r["W"] / 0.25

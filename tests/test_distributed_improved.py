@@ -1,53 +1,41 @@
 """Sharded Algorithm 2 engine tests (subprocess with 8 forced host devices):
 
-* statistical equivalence — distributed IMPROVED-PAGERANK vs the
-  single-device implementation vs power iteration on the `small_graphs`
-  fixture set;
 * round complexity — total phase rounds grow ~sqrt(log n)/eps and stay
   strictly below the Algorithm 1 engine at equal (graph, eps, K);
 * conservation invariants — per-round walk/coupon conservation and
   dropped == 0 for both distributed engines;
 * the exhaustion fallback to naive distributed walking (tiny eta).
+
+Statistical equivalence vs power iteration / the single-device engine is
+covered by the cross-engine gate in `test_engine_conformance.py`.
 """
-import json
-import os
-import subprocess
-import sys
 import textwrap
 
 import pytest
 
-REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+# the conftest `small_graphs` fixtures, rebuilt inside the subprocess from
+# the same source string (device count is process-global, so multi-device
+# runs need a fresh interpreter with XLA_FLAGS set before jax import);
+# Algorithm 2's Lemma-2 pools assume undirected graphs, so the directed
+# fixture is dropped as out of contract
+from conftest import SMALL_GRAPHS_SRC, run_forced_devices
 
-# the conftest `small_graphs` fixtures, reproduced inside the subprocess
-# (device count is process-global, so multi-device runs need a fresh
-# interpreter with XLA_FLAGS set before jax import)
-SMALL_GRAPHS_SRC = """
-from repro.graphs import barabasi_albert, erdos_renyi, grid2d, ring
-graphs = dict(ring=ring(64), grid=grid2d(8, 8),
-              er=erdos_renyi(96, 5.0, seed=1),
-              ba=barabasi_albert(96, 3, seed=2))
-"""
+SMALL_GRAPHS_SRC = SMALL_GRAPHS_SRC + "\ngraphs.pop('dweb')\n"
 
 
 def _run(code: str, devices: int = 8, timeout: int = 1200) -> dict:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = REPO_SRC
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=timeout)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
+    # fixed 8-device mesh: the round-complexity comparisons assume a
+    # specific shard count (CI's 1-device leg skips this file entirely)
+    return run_forced_devices(code, devices=devices, timeout=timeout)
 
 
 @pytest.fixture(scope="module")
 def equiv():
-    """One subprocess over all small_graphs: equivalence + conservation
-    payloads for the improved engine, plus an Algorithm 1 run."""
+    """One subprocess over all small_graphs: conservation payloads for the
+    improved engine, plus an Algorithm 1 run. (Equivalence vs power
+    iteration / single device lives in test_engine_conformance.py.)"""
     return _run(textwrap.dedent("""
         import json, jax, numpy as np
-        from repro.core import (improved_pagerank, l1_error, normalized,
-                                power_iteration)
         from repro.core.distributed import distributed_pagerank
         from repro.core.distributed_improved import (
             distributed_improved_pagerank)
@@ -55,16 +43,10 @@ def equiv():
         eps, K = 0.2, 100
         out = {}
         for name, g in graphs.items():
-            pi_ref, _, _ = power_iteration(g, eps)
             rd = distributed_improved_pagerank(g, eps, K,
                                                jax.random.PRNGKey(0))
-            rs = improved_pagerank(g, eps, walks_per_node=K,
-                                   key=jax.random.PRNGKey(1))
             out[name] = dict(
                 shards=rd.shards, W=g.n * K,
-                l1_dist=l1_error(normalized(rd.pi), pi_ref),
-                l1_single=l1_error(normalized(rs.pi), pi_ref),
-                l1_cross=l1_error(normalized(rd.pi), normalized(rs.pi)),
                 zeta=int(rd.zeta.sum()), eps=eps,
                 dropped=rd.dropped, created=rd.coupons_created,
                 used=rd.coupons_used,
@@ -85,24 +67,14 @@ def _graph_rows(equiv):
     return {k: v for k, v in equiv.items() if not k.startswith("_")}
 
 
-def test_improved_matches_references(equiv):
-    """Distributed Algorithm 2 == power iteration == single-device
-    Algorithm 2, within L1 tolerance, on every small_graphs fixture."""
-    for name, r in _graph_rows(equiv).items():
-        assert r["shards"] == 8, name
-        assert r["l1_dist"] < 0.15, (name, r["l1_dist"])
-        assert r["l1_single"] < 0.15, (name, r["l1_single"])
-        assert r["l1_cross"] < 0.25, (name, r["l1_cross"])
-        # unbiased estimator: total visits ~ W/eps
-        expect = r["W"] / r["eps"]
-        assert abs(r["zeta"] - expect) / expect < 0.07, (name, r["zeta"])
-
-
 def test_improved_conservation_invariants(equiv):
     """Per-round walk conservation through Phase 2, one-coupon-per-stitch,
     and zero buffer drops under the documented cap sizing rule."""
     for name, r in _graph_rows(equiv).items():
         assert r["dropped"] == 0, name
+        # unbiased estimator: total visits ~ W/eps
+        expect = r["W"] / r["eps"]
+        assert abs(r["zeta"] - expect) / expect < 0.07, (name, r["zeta"])
         # every Phase-2 superstep retires exactly the walks it terminated
         # or sent to the fallback: active_t = active_{t-1} - retired_t
         active_prev = r["W"]

@@ -1,13 +1,13 @@
-"""End-to-end correctness of the paper's algorithms vs classical baselines."""
-import jax
-import numpy as np
-import pytest
+"""End-to-end correctness properties of the paper's algorithms (estimator
+bias, Monte-Carlo scaling, round complexity, coupon accounting).
 
-from repro.core import (directed_local_pagerank, exact_pagerank,
-                        improved_pagerank, l1_error, normalized,
-                        power_iteration, simple_pagerank, topk_overlap,
+Engine-vs-power-iteration equivalence checks live in ONE place now — the
+cross-engine gate in `test_engine_conformance.py` — not per-engine here."""
+import jax
+
+from repro.core import (exact_pagerank, improved_pagerank, l1_error,
+                        normalized, power_iteration, simple_pagerank,
                         walks_per_node_for)
-from repro.graphs import directed_web, erdos_renyi
 
 EPS = 0.2
 
@@ -18,17 +18,6 @@ def test_power_iteration_matches_eigenvector(small_graphs):
         pi_exact = exact_pagerank(g, EPS)
         assert l1_error(pi, pi_exact) < 1e-4, name
         assert iters < 200
-
-
-@pytest.mark.parametrize("engine", ["walks", "counts"])
-def test_simple_pagerank_converges(engine, small_graphs):
-    g = small_graphs["er"]
-    pi_ref, _, _ = power_iteration(g, EPS)
-    K = 100 if engine == "counts" else 400
-    res = simple_pagerank(g, EPS, walks_per_node=K,
-                          key=jax.random.PRNGKey(3), engine=engine)
-    assert l1_error(normalized(res.pi), pi_ref) < 0.12
-    assert topk_overlap(res.pi, np.asarray(pi_ref), k=10) >= 0.6
 
 
 def test_simple_pagerank_unbiased_total_mass(small_graphs):
@@ -51,12 +40,10 @@ def test_error_decreases_with_K(small_graphs):
     assert errs[2] < errs[0], errs  # Monte Carlo error shrinks ~ 1/sqrt(K)
 
 
-def test_improved_pagerank_matches(small_graphs):
+def test_improved_pagerank_coupon_accounting(small_graphs):
     g = small_graphs["er"]
-    pi_ref, _, _ = power_iteration(g, EPS)
     res = improved_pagerank(g, EPS, walks_per_node=150,
                             key=jax.random.PRNGKey(11))
-    assert l1_error(normalized(res.pi), pi_ref) < 0.15
     assert res.coupons_used <= res.coupons_created
     assert res.exhausted_walks == 0  # auto-eta sized generously
 
@@ -69,14 +56,6 @@ def test_improved_faster_than_simple_in_congest_rounds(small_graphs):
     improved = improved_pagerank(g, EPS, walks_per_node=60,
                                  key=jax.random.PRNGKey(13))
     assert improved.report.congest_rounds < simple.report.congest_rounds
-
-
-def test_directed_local_variant():
-    g = directed_web(96, 5.0, seed=3)
-    pi_ref, _, _ = power_iteration(g, EPS)
-    res = directed_local_pagerank(g, EPS, walks_per_node=150,
-                                  key=jax.random.PRNGKey(17))
-    assert l1_error(normalized(res.pi), pi_ref) < 0.15
 
 
 def test_default_K_accuracy(small_graphs):

@@ -9,7 +9,7 @@ hypothesis = pytest.importorskip(
     "(pip install -r requirements-test.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import engine_counts
+from repro.core import engine_counts, routing
 from repro.core.graph import from_edges, padded_adjacency
 from repro.kernels.histogram import histogram
 from repro.kernels.histogram.ref import histogram_ref
@@ -72,6 +72,144 @@ def test_csr_total_degree(edges):
     assert int(np.asarray(g.out_deg).sum()) == g.m
     nbr, valid = padded_adjacency(g)
     assert int(np.asarray(valid).sum()) == g.m
+
+
+# ---------------------------------------------------------------------------
+# CONGEST routing-lane primitives (core/routing.py): every shard_map engine
+# moves data through rank_within -> lane_slots -> pack_lanes -> all_to_all,
+# so these invariants gate all four distributed engines at once.
+# ---------------------------------------------------------------------------
+
+def _check_rank_within(keys):
+    rank, _ = routing.rank_within(jnp.asarray(keys, jnp.int32))
+    rank, keys = np.asarray(rank), np.asarray(keys)
+    for v in set(keys.tolist()):
+        ranks_v = rank[keys == v]
+        # a permutation of 0..k-1 per equal-key group (no dup, no gap) ...
+        assert sorted(ranks_v.tolist()) == list(range(len(ranks_v)))
+        # ... assigned stably: rank order == original index order
+        assert (np.diff(ranks_v) > 0).all() if len(ranks_v) > 1 else True
+
+
+@given(st.lists(st.integers(min_value=0, max_value=11), min_size=1,
+                max_size=300))
+def test_rank_within_stable_ranking(keys):
+    _check_rank_within(keys)
+
+
+def _check_lane_slots(targets, valids, shards, lane_cap):
+    t = np.asarray(targets)
+    v = np.asarray(valids)
+    sendable, flat = routing.lane_slots(
+        jnp.asarray(t, jnp.int32), jnp.asarray(v), shards, lane_cap)
+    sendable, flat = np.asarray(sendable), np.asarray(flat)
+    assert not (sendable & ~v).any()          # only valid items get slots
+    for q in range(shards):
+        grp = v & (t == q)
+        sent = sendable & grp
+        # exactly min(|group|, cap) go this round — the rest *wait*,
+        # nothing is silently dropped
+        assert sent.sum() == min(grp.sum(), lane_cap), q
+        slots = flat[sent]
+        assert ((slots >= q * lane_cap) & (slots < (q + 1) * lane_cap)).all()
+    assert len(set(flat[sendable].tolist())) == int(sendable.sum())
+    assert (flat[~sendable] == shards * lane_cap).all()  # sentinel slot
+
+
+@given(st.integers(min_value=1, max_value=6).flatmap(lambda s: st.tuples(
+           st.just(s),
+           st.lists(st.tuples(st.integers(0, s - 1), st.booleans()),
+                    min_size=1, max_size=120),
+           st.integers(min_value=1, max_value=8))))
+def test_lane_slots_no_silent_drops(case):
+    shards, items, lane_cap = case
+    _check_lane_slots([t for t, _ in items], [v for _, v in items],
+                      shards, lane_cap)
+
+
+def _check_pack_exchange_roundtrip(per_shard_targets, lane_cap):
+    """Pack every shard's outbox and emulate the tiled all_to_all (shard
+    q's block p arrives at shard p as block q): the delivered + waiting
+    multisets must equal the sent multiset, each item must land at its
+    target shard, and each (src, dst) lane must preserve source order."""
+    shards = len(per_shard_targets)
+    lanes, waiting = [], []
+    sent_to = {q: [] for q in range(shards)}
+    for p, targets in enumerate(per_shard_targets):
+        t = np.asarray(targets, np.int32)
+        values = (p * 1000 + np.arange(len(t))).astype(np.int32)  # traceable
+        sendable, flat = routing.lane_slots(
+            jnp.asarray(t), jnp.ones(len(t), bool), shards, lane_cap)
+        lane = routing.pack_lanes(flat, jnp.asarray(values),
+                                  sendable, shards, lane_cap)
+        lanes.append(np.asarray(lane).reshape(shards, lane_cap))
+        sendable = np.asarray(sendable)
+        waiting.extend(values[~sendable].tolist())
+        for q in range(shards):
+            sent_to[q].extend(values[sendable & (t == q)].tolist())
+    delivered = []
+    for p in range(shards):
+        recv = np.stack([lanes[q][p] for q in range(shards)])  # [src, cap]
+        for q in range(shards):
+            lane = recv[q][recv[q] >= 0]
+            # occupied slots form a prefix in source order (stable ranks)
+            assert (recv[q][:len(lane)] >= 0).all()
+            assert (np.diff(lane) > 0).all() if len(lane) > 1 else True
+        got = recv[recv >= 0].tolist()
+        assert sorted(got) == sorted(sent_to[p]), p   # right shard, exactly
+        delivered.extend(got)
+    total = sum(len(t) for t in per_shard_targets)
+    assert len(delivered) + len(waiting) == total     # conservation
+    all_values = [p * 1000 + i for p, t in enumerate(per_shard_targets)
+                  for i in range(len(t))]
+    assert sorted(delivered + waiting) == sorted(all_values)
+
+
+@given(st.integers(min_value=1, max_value=5).flatmap(lambda s: st.tuples(
+           st.lists(st.lists(st.integers(0, s - 1), min_size=1, max_size=40),
+                    min_size=s, max_size=s),
+           st.integers(min_value=1, max_value=6))))
+def test_pack_exchange_roundtrip_conserves(case):
+    per_shard_targets, lane_cap = case
+    _check_pack_exchange_roundtrip(per_shard_targets, lane_cap)
+
+
+def _check_merge_walks(kept, recv):
+    cap = len(kept)  # engine contract: the buffer IS the kept array
+    kept_j = jnp.asarray(kept, jnp.int32)
+    recv_j = jnp.asarray(recv, jnp.int32)
+    tag = lambda pos: jnp.where(pos >= 0, pos * 7 + 1, 0)  # paired payload
+    pos, fields, dropped = routing.merge_walks(
+        kept_j, {"x": tag(kept_j)}, recv_j, {"x": tag(recv_j)}, cap)
+    pos, x = np.asarray(pos), np.asarray(fields["x"])
+    n_kept = int((np.asarray(kept) >= 0).sum())
+    n_recv = int((np.asarray(recv) >= 0).sum())
+    assert pos.shape == (cap,)
+    assert int((pos >= 0).sum()) == min(n_kept + n_recv, cap)
+    assert int(dropped) == max(0, n_kept + n_recv - cap)
+    # payload columns travel with their walk through the compaction
+    assert (x[pos >= 0] == pos[pos >= 0] * 7 + 1).all()
+    surviving = pos[pos >= 0].tolist()
+    kept_valid = [p for p in kept if p >= 0]
+    pool = kept_valid + [p for p in recv if p >= 0]
+    if int(dropped) == 0:
+        assert sorted(surviving) == sorted(pool)
+    else:
+        # resident walks are never the ones dropped (they sort first)
+        assert sorted(surviving[:n_kept]) == sorted(kept_valid)
+        remainder = list(surviving)
+        for p in pool:  # surviving ⊆ pool as multisets
+            if p in remainder:
+                remainder.remove(p)
+        assert not remainder
+
+
+@given(st.lists(st.integers(min_value=-1, max_value=99), min_size=1,
+                max_size=60),
+       st.lists(st.integers(min_value=-1, max_value=99), min_size=1,
+                max_size=60))
+def test_merge_walks_conserves_and_drops_exactly(kept, recv):
+    _check_merge_walks(kept, recv)
 
 
 @given(st.integers(min_value=1, max_value=2**16))
