@@ -1,4 +1,6 @@
-from repro.checkpoint.checkpointer import Checkpointer, restore_into
+from repro.checkpoint.checkpointer import (Checkpointer, pack_json,
+                                           restore_into, unpack_json)
 from repro.checkpoint.elastic import relayout_pagerank_state
 
-__all__ = ["Checkpointer", "restore_into", "relayout_pagerank_state"]
+__all__ = ["Checkpointer", "pack_json", "restore_into", "unpack_json",
+           "relayout_pagerank_state"]

@@ -27,6 +27,19 @@ import jax
 import numpy as np
 
 
+def pack_json(obj: Any) -> np.ndarray:
+    """Encode a JSON-able host object (stage tags, telemetry accumulators)
+    as a uint8 leaf, so multi-stage engine snapshots stay a pure
+    pytree-of-arrays that `save`/`restore` can roundtrip through npz."""
+    return np.frombuffer(json.dumps(obj).encode("utf-8"),
+                         dtype=np.uint8).copy()
+
+
+def unpack_json(arr: Any) -> Any:
+    return json.loads(np.asarray(arr, dtype=np.uint8)
+                      .tobytes().decode("utf-8"))
+
+
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     flat = {}
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -79,6 +92,16 @@ class Checkpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+
+    def clear(self):
+        """Remove every existing snapshot (fresh-run semantics): a run
+        that starts from round 0 must never recover from a stale snapshot
+        left in a reused directory by a previous run."""
+        self.wait()
+        for name in os.listdir(self.base_dir):
+            if name.startswith("step_"):
+                shutil.rmtree(os.path.join(self.base_dir, name),
+                              ignore_errors=True)
 
     def _gc(self):
         steps = sorted(self.all_steps())

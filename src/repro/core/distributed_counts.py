@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.distributed import AXIS, shard_map
 from repro.core.graph import CSRGraph
 from repro.core.routing import lane_slots
+from repro.runtime import Stage, StagedState, StageSchedule, run_staged
 
 
 @dataclasses.dataclass(frozen=True)
@@ -227,13 +228,26 @@ class CountDistResult:
     overflow: int
     shards: int
     lane_cap: int
+    restarts: int = 0            # supervisor recoveries (fault injection)
+    checkpoints_written: int = 0
 
 
 def distributed_pagerank_counts(graph: CSRGraph, eps: float,
                                 walks_per_node: int, key: jnp.ndarray, *,
                                 mesh: Optional[Mesh] = None,
                                 packed: bool = True,
-                                max_rounds: int = 100_000) -> CountDistResult:
+                                max_rounds: int = 100_000,
+                                checkpoint_dir: Optional[str] = None,
+                                fail_at: Optional[Sequence[int]] = None,
+                                checkpoint_every: int = 10,
+                                max_restarts: int = 16,
+                                resume: bool = False) -> CountDistResult:
+    """Count-aggregated Algorithm 1 across all devices of `mesh`.
+
+    With `checkpoint_dir`/`fail_at` set, the super-step loop runs under the
+    checkpoint-restart supervisor (single-stage schedule): recovery from an
+    injected failure replays the identical trajectory (state includes the
+    PRNG keys), so the recovered run is bit-exact."""
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), (AXIS,))
     shards = mesh.devices.size
@@ -243,29 +257,47 @@ def distributed_pagerank_counts(graph: CSRGraph, eps: float,
     counts0 = np.zeros((shards, sg.n_loc), np.int32)
     counts0.reshape(-1)[: graph.n] = walks_per_node
     keys = jax.random.split(key, shards)
-    state = CountDistState(
-        counts=jax.device_put(jnp.asarray(counts0), spec),
-        zeta=jax.device_put(jnp.asarray(counts0), spec),
-        key=jax.device_put(keys, spec),
-        round=jnp.int32(0))
     nbr = jax.device_put(sg.nbr, spec)
     valid = jax.device_put(sg.valid, spec)
     deg = jax.device_put(sg.deg, spec)
 
     step = make_count_superstep(mesh, float(eps), sg, packed=packed)
-    a2a_total = 0
-    overflow_total = 0
-    rounds = 0
-    while rounds < max_rounds:
-        state, active, a2a, ovf = step(nbr, valid, deg, state)
-        a2a_total += int(a2a)
-        overflow_total += int(ovf)
-        rounds += 1
-        if int(active) == 0:
-            break
-    zeta = state.zeta.reshape(-1)[: graph.n]
+
+    def _step(ms: StagedState):
+        a = ms.arrays
+        st = CountDistState(counts=a["counts"], zeta=a["zeta"],
+                            key=a["key"], round=a["round"])
+        st, active, a2a, ovf = step(nbr, valid, deg, st)
+        a.update(counts=st.counts, zeta=st.zeta, key=st.key, round=st.round)
+        h = ms.host
+        h["rounds"] += 1
+        h["a2a"] += int(a2a)
+        h["overflow"] += int(ovf)
+        return ms, int(active) == 0 or h["rounds"] >= max_rounds
+
+    schedule = StageSchedule([Stage("counts", _step)])
+    ms = StagedState(
+        stage=schedule.first_stage,
+        arrays=dict(counts=jax.device_put(jnp.asarray(counts0), spec),
+                    zeta=jax.device_put(jnp.asarray(counts0), spec),
+                    key=jax.device_put(keys, spec),
+                    round=jnp.int32(0)),
+        host=dict(rounds=0, a2a=0, overflow=0))
+
+    def _put(name, arr):
+        return (jnp.asarray(arr) if name == "round"
+                else jax.device_put(jnp.asarray(arr), spec))
+
+    ms, restarts, checkpoints_written = run_staged(
+        schedule, ms, _put, checkpoint_dir=checkpoint_dir, fail_at=fail_at,
+        checkpoint_every=checkpoint_every, max_restarts=max_restarts,
+        resume=resume, max_rounds=max_rounds + 1,
+        tmp_prefix="prcnt_ckpt_")
+
+    zeta = ms.arrays["zeta"].reshape(-1)[: graph.n]
     pi = zeta.astype(jnp.float32) * (eps / (graph.n * walks_per_node))
-    return CountDistResult(zeta=zeta, pi=pi, rounds=rounds,
-                           a2a_bytes_total=a2a_total,
-                           overflow=overflow_total, shards=shards,
-                           lane_cap=sg.lane_cap)
+    return CountDistResult(zeta=zeta, pi=pi, rounds=ms.host["rounds"],
+                           a2a_bytes_total=ms.host["a2a"],
+                           overflow=ms.host["overflow"], shards=shards,
+                           lane_cap=sg.lane_cap, restarts=restarts,
+                           checkpoints_written=checkpoints_written)

@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -81,9 +81,18 @@ def distributed_directed_pagerank(
     rep_cap: Optional[int] = None,
     max_rounds: int = 100_000,
     bandwidth_bits: Optional[int] = None,
+    checkpoint_dir: Optional[str] = None,
+    fail_at: Optional[Sequence[int]] = None,
+    checkpoint_every: int = 10,
+    max_restarts: int = 16,
+    resume: bool = False,
 ) -> DirectedDistResult:
     """Run the Section-5 directed/LOCAL algorithm across all devices of
-    `mesh` (default: all devices)."""
+    `mesh` (default: all devices).
+
+    `checkpoint_dir`/`fail_at`/`checkpoint_every`/`max_restarts`/`resume`
+    select the checkpoint-restart supervisor over the shared phase-machine
+    (see `distributed_improved._run_three_phase`): recovery is bit-exact."""
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), (AXIS,))
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -113,6 +122,8 @@ def distributed_directed_pagerank(
         lam=int(lam), ell=int(ell), cap1=cap1, cap2=cap2,
         route_cap1=route_cap1, route_cap2=route_cap2, rep_cap=rep_cap,
         max_rounds=max_rounds, bandwidth_bits=bandwidth_bits,
-        result_cls=DirectedDistResult,
+        checkpoint_dir=checkpoint_dir, fail_at=fail_at,
+        checkpoint_every=checkpoint_every, max_restarts=max_restarts,
+        resume=resume, result_cls=DirectedDistResult,
         uniform_budget=int(pool_np[0]),
         dangling_nodes=int((np.asarray(graph.out_deg) == 0).sum()))

@@ -55,13 +55,24 @@ lives in the budget-policy-agnostic `_run_three_phase`; this module's
 public `distributed_improved_pagerank` feeds it Lemma-2 degree-proportional
 pools, and `distributed_directed.distributed_directed_pagerank` feeds it
 the Section-5 uniform/LOCAL pools.
+
+Fault tolerance — the driver is a *checkpointable phase-machine*: each
+phase (phase1, report, phase2, phase3, tail) is a named `runtime.Stage`
+whose snapshot is the stage's device buffers (walk buffers, PRNG keys,
+coupon tables, the `used` bitmap) plus the host accumulators (wire/trace
+telemetry, round counters) as a pytree of arrays. With `checkpoint_dir`/
+`fail_at` set, the `runtime.Supervisor` drives the composed
+`StageSchedule`: a killed run resumes mid-phase from the latest
+stage-tagged snapshot and — because every stage is deterministic given its
+buffers and keys (Phase 3 *depends* on that determinism for replay) —
+produces bit-identical `zeta`/`pi` and telemetry vs an unfailed run.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +88,7 @@ from repro.core.routing import (advance_owned, count_owned_arrivals,
                                 exchange_stacked, lane_slots, merge_walks,
                                 pack_lanes, rank_within, route_walks)
 from repro.core.simple_pagerank import walks_per_node_for
+from repro.runtime import Stage, StagedState, StageSchedule, run_staged
 
 
 # ---------------------------------------------------------------------------
@@ -334,6 +346,24 @@ def _make_finalize(mesh: Mesh, scale: float):
 # main driver
 # ---------------------------------------------------------------------------
 
+def _lane_cap(requested: Optional[int], load: int, shards: int,
+              floor: int = 64) -> int:
+    """Single home of the documented lane sizing rule `route_cap >= W/P`.
+
+    With W items resident and P shards, ceil(W/P) slots per (src, dst)
+    lane guarantee a full buffer can drain in P rounds even when every
+    item targets one shard; floor division under-sizes the lane whenever
+    W % P != 0. Defaults are computed with ceil division and the rule is
+    asserted for explicit overrides too (an undersized lane only costs
+    waiting latency, but it breaks the documented sizing contract)."""
+    need = -(-max(int(load), 0) // shards)          # ceil(W / P)
+    cap = max(need, floor) if requested is None else int(requested)
+    assert cap >= need, (
+        f"lane cap {cap} violates route_cap >= ceil(W/P) = {need} "
+        f"(W={load}, P={shards})")
+    return cap
+
+
 @dataclasses.dataclass
 class ImprovedDistResult:
     zeta: jnp.ndarray            # [n] global visit counts
@@ -364,6 +394,8 @@ class ImprovedDistResult:
     phase2_records: List[dict] = dataclasses.field(default_factory=list)
     report: Optional[CongestReport] = None
     total_visits: int = 0
+    restarts: int = 0            # supervisor recoveries (fault injection)
+    checkpoints_written: int = 0
 
 
 def distributed_improved_pagerank(
@@ -383,8 +415,16 @@ def distributed_improved_pagerank(
     rep_cap: Optional[int] = None,
     max_rounds: int = 100_000,
     bandwidth_bits: Optional[int] = None,
+    checkpoint_dir: Optional[str] = None,
+    fail_at: Optional[Sequence[int]] = None,
+    checkpoint_every: int = 10,
+    max_restarts: int = 16,
+    resume: bool = False,
 ) -> ImprovedDistResult:
-    """Run Algorithm 2 across all devices of `mesh` (default: all devices)."""
+    """Run Algorithm 2 across all devices of `mesh` (default: all devices).
+
+    With `checkpoint_dir` and/or `fail_at` set, the phase-machine runs
+    under the checkpoint-restart supervisor (see `_run_three_phase`)."""
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), (AXIS,))
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -400,7 +440,10 @@ def distributed_improved_pagerank(
         graph, eps, K, key, mesh, pool_np=pool_np, eta=int(eta),
         lam=int(lam), ell=int(ell), cap1=cap1, cap2=cap2,
         route_cap1=route_cap1, route_cap2=route_cap2, rep_cap=rep_cap,
-        max_rounds=max_rounds, bandwidth_bits=bandwidth_bits)
+        max_rounds=max_rounds, bandwidth_bits=bandwidth_bits,
+        checkpoint_dir=checkpoint_dir, fail_at=fail_at,
+        checkpoint_every=checkpoint_every, max_restarts=max_restarts,
+        resume=resume)
 
 
 def _run_three_phase(
@@ -421,10 +464,16 @@ def _run_three_phase(
     rep_cap: Optional[int] = None,
     max_rounds: int = 100_000,
     bandwidth_bits: Optional[int] = None,
+    checkpoint_dir: Optional[str] = None,
+    fail_at: Optional[Sequence[int]] = None,
+    checkpoint_every: int = 10,
+    max_restarts: int = 16,
+    resume: bool = False,
     result_cls: type = ImprovedDistResult,
     **extra_fields,
 ):
-    """Budget-policy-agnostic 3-phase stitching driver.
+    """Budget-policy-agnostic 3-phase stitching driver, structured as a
+    checkpointable phase-machine.
 
     The whole engine — Phase-1 short walks, the closing report exchange,
     Phase-2 stitching, Phase-3 replay counting, the naive tail, and the
@@ -434,6 +483,19 @@ def _run_three_phase(
     directed_pagerank` (Section 5, uniform budgets in the LOCAL model) are
     thin frontends over this core. `result_cls`/`extra_fields` let a
     frontend return a telemetry subclass of ImprovedDistResult.
+
+    Each phase is a `runtime.Stage` over a `StagedState` whose `arrays`
+    hold the phase's device buffers and whose `host` dict holds the
+    accumulators (round counters, wire volumes, traces, Phase-2 records).
+    Without `checkpoint_dir`/`fail_at` the composed `StageSchedule` is
+    stepped in a plain loop (no snapshot overhead); with either set, the
+    `runtime.Supervisor` drives it with periodic stage-tagged checkpoints
+    and (optionally) injected failures at the listed *global* rounds —
+    round indices span all phases, so failures can land at phase
+    boundaries or mid-phase. Recovery restores the latest snapshot and
+    replays the identical trajectory: `zeta`/`pi` and all telemetry are
+    bit-identical to an unfailed run. `resume=True` cold-starts from the
+    latest snapshot in `checkpoint_dir` (a previously killed run).
     """
     shards = int(mesh.devices.size)
     n = graph.n
@@ -457,16 +519,14 @@ def _run_three_phase(
     if shards * S_loc_pad >= 2 ** 31:
         raise ValueError("coupon pool too large for int32 ids")
 
-    if route_cap1 is None:
-        route_cap1 = max(S_total // shards, 64)
+    # lane caps resolve (and assert) the route_cap >= W/P rule in ONE place
+    route_cap1 = _lane_cap(route_cap1, S_total, shards)
+    route_cap2 = _lane_cap(route_cap2, n * K, shards)
+    rep_cap = _lane_cap(rep_cap, S_loc_pad, shards)
     if cap1 is None:
         cap1 = max(2 * S_total // shards, S_loc_pad) + shards * 64
-    if route_cap2 is None:
-        route_cap2 = max(n * K // shards, 64)
     if cap2 is None:
         cap2 = max(2 * n * K // shards, n_loc * K) + shards * 64
-    if rep_cap is None:
-        rep_cap = max(S_loc_pad // shards, 64)
 
     # ---- Phase-1 initial placement: each coupon at its source vertex ----
     pos0 = np.full((shards, cap1), -1, dtype=np.int32)
@@ -479,6 +539,17 @@ def _run_three_phase(
         pos0[p, : len(src)] = src
         cid0[p, : len(src)] = p * S_loc_pad + np.arange(len(src),
                                                         dtype=np.int32)
+    # ---- Phase-2 initial placement: K long walks per real vertex ----
+    pos2_np = np.full((shards, cap2), -1, dtype=np.int32)
+    for p in range(shards):
+        lo = min(p * n_loc, n)
+        hi = min((p + 1) * n_loc, n)
+        locs = np.repeat(np.arange(lo, hi, dtype=np.int32), K)
+        assert len(locs) <= cap2, "cap2 too small for initial placement"
+        pos2_np[p, : len(locs)] = locs
+    zeta3_np = np.zeros((shards, n_loc), np.int32)
+    zeta3_np.reshape(-1)[:n] = K                 # start visits of long walks
+
     key, k1, k_tail = jax.random.split(key, 3)
     k1_shards = jax.random.split(k1, shards)
     zeros1 = np.zeros((shards, cap1), dtype=np.int32)
@@ -494,171 +565,245 @@ def _run_three_phase(
             key=jax.device_put(k1_shards, spec),
             zeta=jax.device_put(jnp.asarray(zeta0), spec))
 
-    wire = dict(phase1=0, report=0, phase2=0, phase3=0, tail=0)
-    traces: List[RoundTrace] = []
-    dropped_total = 0
-    waited_total = 0
-
-    # ---------------- Phase 1 (counting disabled) ----------------
+    # ---- jitted per-phase step functions (shared by fresh + resumed) ----
     p1_step = _make_p1_step(mesh, eps=float(eps), lam=int(lam), n_loc=n_loc,
                             shards=shards, route_cap=int(route_cap1),
                             count=False)
-    no_used = jnp.zeros((1,), jnp.int32)
-    st = fresh_p1_state(np.zeros((shards, n_loc), np.int32))
-    phase1_rounds = 0
-    while phase1_rounds < max_rounds:
-        st, pending, dropped, waited, sent = p1_step(sg_rp, sg_ci, sg_dg,
-                                                     st, no_used)
-        phase1_rounds += 1
-        dropped_total += int(dropped)
-        waited_total += int(waited)
-        entries = int(sent)
-        wire["phase1"] += entries * 20          # pos+cid+steps+moves+alive
-        traces.append(RoundTrace(active_walks=int(pending), messages=entries,
-                                 max_edge_count=1, total_count=entries))
-        if int(pending) == 0:
-            break
-    else:
-        raise RuntimeError("phase 1 did not converge within max_rounds")
-
-    # ---------------- Phase 1 closing report exchange ----------------
     rep_step = _make_report_step(mesh, shards=shards, S_loc_pad=S_loc_pad,
                                  rep_cap=int(rep_cap))
-    zero_pool = jax.device_put(
-        jnp.zeros((shards, S_loc_pad), jnp.int32), spec)
-    # every live buffer slot holds one (possibly migrated) coupon; empty
-    # slots must not report — their cid field is stale after compaction
-    pending = (st.pos >= 0).astype(jnp.int32)
-    dest, clen, cterm = zero_pool, zero_pool, zero_pool
-    report_rounds = 0
-    while report_rounds < max_rounds:
-        pending, dest, clen, cterm, left, sent = rep_step(
-            st.pos, st.cid, st.moves, st.alive, pending, dest, clen, cterm)
-        report_rounds += 1
-        entries = int(sent)
-        wire["report"] += entries * 16           # cid+dest+len+term
-        traces.append(RoundTrace(active_walks=int(left), messages=entries,
-                                 max_edge_count=1, total_count=entries))
-        if int(left) == 0:
-            break
-    else:
-        raise RuntimeError("phase-1 report did not converge")
-
-    # ---------------- Phase 2: stitching ----------------
-    W = n * K
-    pos2 = np.full((shards, cap2), -1, dtype=np.int32)
-    for p in range(shards):
-        lo = min(p * n_loc, n)
-        hi = min((p + 1) * n_loc, n)
-        locs = np.repeat(np.arange(lo, hi, dtype=np.int32), K)
-        assert len(locs) <= cap2, "cap2 too small for initial placement"
-        pos2[p, : len(locs)] = locs
     p2_step = _make_p2_step(mesh, n_loc=n_loc, shards=shards,
                             route_cap=int(route_cap2), S_loc_pad=S_loc_pad)
-    pos2_j = jax.device_put(jnp.asarray(pos2), spec)
-    lend = jax.device_put(jnp.zeros((shards, cap2), jnp.int32), spec)
-    mode = jax.device_put(jnp.zeros((shards, cap2), jnp.int32), spec)
-    next_c = jax.device_put(jnp.zeros((shards, n_loc), jnp.int32), spec)
-    used = jax.device_put(jnp.zeros((shards, S_loc_pad), jnp.int32), spec)
-    psize_j = jax.device_put(jnp.asarray(psize_sh, dtype=jnp.int32), spec)
-    pstart_j = jax.device_put(jnp.asarray(pstart_sh, dtype=jnp.int32), spec)
-
-    phase2_rounds = 0
-    stitches_total = 0
-    terminated_total = 0
-    exhausted_total = 0
-    phase2_records: List[dict] = []
-    while phase2_rounds < max_rounds:
-        (pos2_j, lend, mode, next_c, used, active, stitched, terminated,
-         exhausted, dropped, waited, sent) = p2_step(
-            pos2_j, lend, mode, next_c, used, psize_j, pstart_j, dest, clen,
-            cterm)
-        phase2_rounds += 1
-        stitches_total += int(stitched)
-        terminated_total += int(terminated)
-        exhausted_total += int(exhausted)
-        dropped_total += int(dropped)
-        waited_total += int(waited)
-        entries = int(sent)
-        wire["phase2"] += entries * 12           # pos+len+mode
-        phase2_records.append(dict(
-            active=int(active), stitched=int(stitched),
-            terminated=int(terminated), exhausted=int(exhausted)))
-        traces.append(RoundTrace(active_walks=int(active), messages=entries,
-                                 max_edge_count=1, total_count=entries))
-        if int(active) == 0:
-            break
-    else:
-        raise RuntimeError("phase 2 did not converge within max_rounds")
-    coupons_used = int(np.asarray(used).sum())
-
-    # ---------------- Phase 3: replay Phase 1, counting used coupons ----
-    # One broadcast of the used bitmap (charged to Phase-3 wire volume),
-    # then a deterministic re-run of the Phase-1 schedule with counting on.
-    used_full = jnp.asarray(np.asarray(used).reshape(-1))
-    wire["phase3"] += shards * S_loc_pad * 4
-    zeta0 = np.zeros((shards, n_loc), np.int32)
-    zeta0.reshape(-1)[:n] = K                    # start visits of long walks
     p3_step = _make_p1_step(mesh, eps=float(eps), lam=int(lam), n_loc=n_loc,
                             shards=shards, route_cap=int(route_cap1),
                             count=True)
-    st3 = fresh_p1_state(zeta0)
-    for _ in range(phase1_rounds):
-        st3, pending3, _, _, sent = p3_step(sg_rp, sg_ci, sg_dg, st3,
-                                            used_full)
-        entries = int(sent)
-        wire["phase3"] += entries * 20
-        traces.append(RoundTrace(active_walks=int(pending3),
-                                 messages=entries, max_edge_count=1,
-                                 total_count=entries))
-    phase3_rounds = phase1_rounds
-
-    # ---------------- tail: exhausted/over-budget walks walk naively ----
-    pos_tail = jnp.where((mode == 1) & (pos2_j >= 0), pos2_j, -1)
-    tail_walks = int(jnp.sum(pos_tail >= 0))
-    tail_state = DistState(
-        pos=jax.device_put(pos_tail, spec),
-        zeta=st3.zeta,
-        key=jax.device_put(jax.random.split(k_tail, shards), spec),
-        round=jnp.int32(0), dropped=jnp.int32(0), waited=jnp.int32(0))
     tail_step = _make_superstep(mesh, float(eps), n_loc, shards,
                                 int(route_cap2), 0)
-    tail_rounds = 0
-    remaining = tail_walks
-    while remaining:
-        if tail_rounds >= max_rounds:
-            raise RuntimeError("tail walks did not converge in max_rounds")
-        tail_state, active, a2a = tail_step(sg_rp, sg_ci, sg_dg, tail_state)
-        tail_rounds += 1
-        entries = int(a2a) // 4
-        wire["tail"] += int(a2a)
-        traces.append(RoundTrace(active_walks=int(active), messages=entries,
-                                 max_edge_count=1, total_count=entries))
-        remaining = int(active)
-    dropped_total += int(tail_state.dropped)
-    waited_total += int(tail_state.waited)
+    psize_j = jax.device_put(jnp.asarray(psize_sh, dtype=jnp.int32), spec)
+    pstart_j = jax.device_put(jnp.asarray(pstart_sh, dtype=jnp.int32), spec)
+    no_used = jnp.zeros((1,), jnp.int32)
+
+    _P1_FIELDS = ("pos", "cid", "steps", "moves", "alive", "key", "zeta")
+
+    # ---------------- stage step functions + host transitions ----------
+    # Telemetry lives in the JSON-able `host` dict so a restored snapshot
+    # rolls the accumulators back in lockstep with the device buffers.
+
+    def _phase1(ms: StagedState):
+        st = ShortWalkState(**{f: ms.arrays[f] for f in _P1_FIELDS})
+        st, pending, dropped, waited, sent = p1_step(sg_rp, sg_ci, sg_dg,
+                                                     st, no_used)
+        ms.arrays.update({f: getattr(st, f) for f in _P1_FIELDS})
+        h = ms.host
+        h["phase1_rounds"] += 1
+        h["dropped"] += int(dropped)
+        h["waited"] += int(waited)
+        entries = int(sent)
+        h["wire"]["phase1"] += entries * 20      # pos+cid+steps+moves+alive
+        h["traces"].append([int(pending), entries])
+        if int(pending) == 0:
+            return ms, True
+        if h["phase1_rounds"] >= max_rounds:
+            raise RuntimeError("phase 1 did not converge within max_rounds")
+        return ms, False
+
+    def _after_phase1(ms: StagedState) -> StagedState:
+        a = ms.arrays
+        zero_pool = jax.device_put(
+            jnp.zeros((shards, S_loc_pad), jnp.int32), spec)
+        # every live buffer slot holds one (possibly migrated) coupon;
+        # empty slots must not report — their cid is stale after compaction
+        ms.arrays = dict(pos=a["pos"], cid=a["cid"], moves=a["moves"],
+                         alive=a["alive"],
+                         pending=(a["pos"] >= 0).astype(jnp.int32),
+                         dest=zero_pool, clen=zero_pool, cterm=zero_pool)
+        return ms
+
+    def _report(ms: StagedState):
+        a = ms.arrays
+        pending, dest, clen, cterm, left, sent = rep_step(
+            a["pos"], a["cid"], a["moves"], a["alive"], a["pending"],
+            a["dest"], a["clen"], a["cterm"])
+        a.update(pending=pending, dest=dest, clen=clen, cterm=cterm)
+        h = ms.host
+        h["report_rounds"] += 1
+        entries = int(sent)
+        h["wire"]["report"] += entries * 16      # cid+dest+len+term
+        h["traces"].append([int(left), entries])
+        if int(left) == 0:
+            return ms, True
+        if h["report_rounds"] >= max_rounds:
+            raise RuntimeError("phase-1 report did not converge")
+        return ms, False
+
+    def _after_report(ms: StagedState) -> StagedState:
+        a = ms.arrays
+        zeros2 = jnp.zeros((shards, cap2), jnp.int32)
+        ms.arrays = dict(
+            pos2=jax.device_put(jnp.asarray(pos2_np), spec),
+            lend=jax.device_put(zeros2, spec),
+            mode=jax.device_put(zeros2, spec),
+            next_c=jax.device_put(jnp.zeros((shards, n_loc), jnp.int32),
+                                  spec),
+            used=jax.device_put(jnp.zeros((shards, S_loc_pad), jnp.int32),
+                                spec),
+            dest=a["dest"], clen=a["clen"], cterm=a["cterm"])
+        return ms
+
+    def _phase2(ms: StagedState):
+        a = ms.arrays
+        (pos2, lend, mode, next_c, used, active, stitched, terminated,
+         exhausted, dropped, waited, sent) = p2_step(
+            a["pos2"], a["lend"], a["mode"], a["next_c"], a["used"],
+            psize_j, pstart_j, a["dest"], a["clen"], a["cterm"])
+        a.update(pos2=pos2, lend=lend, mode=mode, next_c=next_c, used=used)
+        h = ms.host
+        h["phase2_rounds"] += 1
+        h["stitches"] += int(stitched)
+        h["terminated"] += int(terminated)
+        h["exhausted"] += int(exhausted)
+        h["dropped"] += int(dropped)
+        h["waited"] += int(waited)
+        entries = int(sent)
+        h["wire"]["phase2"] += entries * 12      # pos+len+mode
+        h["phase2_records"].append(dict(
+            active=int(active), stitched=int(stitched),
+            terminated=int(terminated), exhausted=int(exhausted)))
+        h["traces"].append([int(active), entries])
+        if int(active) == 0:
+            return ms, True
+        if h["phase2_rounds"] >= max_rounds:
+            raise RuntimeError("phase 2 did not converge within max_rounds")
+        return ms, False
+
+    def _after_phase2(ms: StagedState) -> StagedState:
+        # One broadcast of the used bitmap (charged to Phase-3 wire
+        # volume), then a deterministic re-run of the Phase-1 schedule
+        # with counting on.
+        a = ms.arrays
+        h = ms.host
+        used_np = np.asarray(a["used"])
+        h["coupons_used"] = int(used_np.sum())
+        h["wire"]["phase3"] += shards * S_loc_pad * 4
+        st3 = fresh_p1_state(zeta3_np)
+        ms.arrays = {f: getattr(st3, f) for f in _P1_FIELDS}
+        ms.arrays["used_full"] = jnp.asarray(used_np.reshape(-1))
+        # pos2/mode ride along untouched: the tail placement needs them
+        ms.arrays["pos2"] = a["pos2"]
+        ms.arrays["mode"] = a["mode"]
+        return ms
+
+    def _phase3(ms: StagedState):
+        st = ShortWalkState(**{f: ms.arrays[f] for f in _P1_FIELDS})
+        st, pending3, _, _, sent = p3_step(sg_rp, sg_ci, sg_dg, st,
+                                           ms.arrays["used_full"])
+        ms.arrays.update({f: getattr(st, f) for f in _P1_FIELDS})
+        h = ms.host
+        h["phase3_rounds"] += 1
+        entries = int(sent)
+        h["wire"]["phase3"] += entries * 20
+        h["traces"].append([int(pending3), entries])
+        # the replay costs exactly phase1_rounds supersteps, by schedule
+        return ms, h["phase3_rounds"] >= h["phase1_rounds"]
+
+    def _after_phase3(ms: StagedState) -> StagedState:
+        a = ms.arrays
+        h = ms.host
+        pos_tail = jnp.where((a["mode"] == 1) & (a["pos2"] >= 0),
+                             a["pos2"], -1)
+        h["tail_walks"] = int(jnp.sum(pos_tail >= 0))
+        h["tail_active"] = h["tail_walks"]
+        ms.arrays = dict(
+            pos=jax.device_put(pos_tail, spec),
+            zeta=a["zeta"],
+            key=jax.device_put(jax.random.split(k_tail, shards), spec),
+            round=jnp.int32(0), dropped=jnp.int32(0), waited=jnp.int32(0))
+        return ms
+
+    def _tail(ms: StagedState):
+        a = ms.arrays
+        h = ms.host
+        if h["tail_active"]:
+            if h["tail_rounds"] >= max_rounds:
+                raise RuntimeError(
+                    "tail walks did not converge in max_rounds")
+            tstate = DistState(pos=a["pos"], zeta=a["zeta"], key=a["key"],
+                               round=a["round"], dropped=a["dropped"],
+                               waited=a["waited"])
+            tstate, active, a2a = tail_step(sg_rp, sg_ci, sg_dg, tstate)
+            a.update(pos=tstate.pos, zeta=tstate.zeta, key=tstate.key,
+                     round=tstate.round, dropped=tstate.dropped,
+                     waited=tstate.waited)
+            h["tail_rounds"] += 1
+            h["wire"]["tail"] += int(a2a)
+            h["traces"].append([int(active), int(a2a) // 4])
+            h["tail_active"] = int(active)
+        if h["tail_active"]:
+            return ms, False
+        h["dropped"] += int(a["dropped"])
+        h["waited"] += int(a["waited"])
+        return ms, True
+
+    schedule = StageSchedule([
+        Stage("phase1", _phase1, on_done=_after_phase1),
+        Stage("report", _report, on_done=_after_report),
+        Stage("phase2", _phase2, on_done=_after_phase2),
+        Stage("phase3", _phase3, on_done=_after_phase3),
+        Stage("tail", _tail),
+    ])
+
+    st0 = fresh_p1_state(np.zeros((shards, n_loc), np.int32))
+    ms = StagedState(
+        stage=schedule.first_stage,
+        arrays={f: getattr(st0, f) for f in _P1_FIELDS},
+        host=dict(phase1_rounds=0, report_rounds=0, phase2_rounds=0,
+                  phase3_rounds=0, tail_rounds=0, dropped=0, waited=0,
+                  stitches=0, terminated=0, exhausted=0, coupons_used=0,
+                  tail_walks=0, tail_active=0,
+                  wire=dict(phase1=0, report=0, phase2=0, phase3=0, tail=0),
+                  traces=[], phase2_records=[]))
+
+    # ---------------- drive: plain loop or checkpointing supervisor ----
+    _scalar_keys = ("round", "dropped", "waited")
+
+    def _put(name: str, arr: np.ndarray):
+        if name in _scalar_keys or name == "used_full":
+            return jnp.asarray(arr)              # replicated scalars/bitmap
+        return jax.device_put(jnp.asarray(arr), spec)
+
+    # global rounds sum over the five stages, each bounded by max_rounds
+    # (the per-stage guards raise on divergence)
+    ms, restarts, checkpoints_written = run_staged(
+        schedule, ms, _put, checkpoint_dir=checkpoint_dir, fail_at=fail_at,
+        checkpoint_every=checkpoint_every, max_restarts=max_restarts,
+        resume=resume, max_rounds=5 * max_rounds + len(schedule.stages),
+        tmp_prefix="pr3p_ckpt_")
 
     # ---------------- estimator: psum-reduced across the mesh ----------
     finalize = _make_finalize(mesh, float(eps) / (n * K))
-    pi_sh, total_visits = finalize(tail_state.zeta)
-    zeta = tail_state.zeta.reshape(-1)[:n]
+    pi_sh, total_visits = finalize(ms.arrays["zeta"])
+    zeta = ms.arrays["zeta"].reshape(-1)[:n]
     pi = pi_sh.reshape(-1)[:n]
 
-    rounds = (phase1_rounds + report_rounds + phase2_rounds + phase3_rounds
-              + tail_rounds)
+    h = ms.host
+    wire = h["wire"]
+    rounds = (h["phase1_rounds"] + h["report_rounds"] + h["phase2_rounds"]
+              + h["phase3_rounds"] + h["tail_rounds"])
+    traces = [RoundTrace(active_walks=a, messages=m, max_edge_count=1,
+                         total_count=m) for a, m in h["traces"]]
     report = CongestReport(traces=traces, n=n,
                            bandwidth_bits=bandwidth_bits
                            or default_bandwidth(n))
     return result_cls(
         zeta=zeta, pi=pi, shards=shards, walks_per_node=K, eps=eps,
         lam=int(lam), eta=int(eta), ell=int(ell), rounds=rounds,
-        phase1_rounds=phase1_rounds, report_rounds=report_rounds,
-        phase2_rounds=phase2_rounds, phase3_rounds=phase3_rounds,
-        tail_rounds=tail_rounds, stitch_iterations=phase2_rounds,
-        exhausted_walks=exhausted_total,
-        terminated_by_coupon=terminated_total, tail_walks=tail_walks,
-        coupons_created=S_total, coupons_used=coupons_used,
-        dropped=dropped_total, waited=waited_total,
+        phase1_rounds=h["phase1_rounds"], report_rounds=h["report_rounds"],
+        phase2_rounds=h["phase2_rounds"], phase3_rounds=h["phase3_rounds"],
+        tail_rounds=h["tail_rounds"], stitch_iterations=h["phase2_rounds"],
+        exhausted_walks=h["exhausted"],
+        terminated_by_coupon=h["terminated"], tail_walks=h["tail_walks"],
+        coupons_created=S_total, coupons_used=h["coupons_used"],
+        dropped=h["dropped"], waited=h["waited"],
         a2a_bytes_total=sum(wire.values()), a2a_bytes_by_phase=wire,
-        phase2_records=phase2_records, report=report,
-        total_visits=int(total_visits), **extra_fields)
+        phase2_records=h["phase2_records"], report=report,
+        total_visits=int(total_visits), restarts=restarts,
+        checkpoints_written=checkpoints_written, **extra_fields)

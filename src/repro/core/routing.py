@@ -55,9 +55,15 @@ def rank_within(sort_key: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
     Returns (rank, order): `rank[i]` is the 0-based position of element i
     among elements with the same `sort_key`, `order` is the stable argsort.
+
+    Stability is load-bearing, not cosmetic: `lane_slots`' zero-drop
+    property, natural-order coupon consumption in Phase 2, and the
+    Phase-3 deterministic replay all require equal keys to keep buffer
+    order — so it is requested explicitly rather than relying on the
+    jnp.argsort default.
     """
     W = sort_key.shape[0]
-    order = jnp.argsort(sort_key)
+    order = jnp.argsort(sort_key, stable=True)
     sorted_k = sort_key[order]
     idx = jnp.arange(W)
     is_start = jnp.concatenate([jnp.ones((1,), bool),

@@ -4,10 +4,7 @@
         --walks 64 --graph erdos_renyi --algo improved
 
 Engine selection (`--algo`):
-  walks     Algorithm 1, walk-routing shard_map engine (default). Runs
-            under the checkpoint-restart supervisor (optionally with
-            injected failures via --fail-at to demonstrate exact
-            recovery).
+  walks     Algorithm 1, walk-routing shard_map engine (default).
   counts    Algorithm 1, count-aggregated engine (Lemma-1 wire: per-vertex
             coupon counts, payload independent of the walk count).
   improved  Algorithm 2 (IMPROVED-PAGERANK), three-phase sharded engine:
@@ -21,7 +18,18 @@ Engine selection (`--algo`):
             Pair it with `--graph directed_web` to exercise a power-law
             directed fixture.
 
-Every run validates against power iteration (L1 and top-10 overlap).
+Fault tolerance applies to EVERY engine: `--checkpoint-dir` enables
+periodic snapshots, `--fail-at R [R ...]` injects simulated failures at
+the listed global rounds (for the 3-phase engines, round indices span all
+five phases, so a failure can land at a phase boundary or mid-phase), and
+recovery from the latest snapshot is bit-exact — the recovered run prints
+the same pi, telemetry, and accuracy as an unfailed one, plus restarts>0.
+`--resume` cold-starts from the latest snapshot in --checkpoint-dir (a
+previously killed run) instead of from round 0.
+
+Every run validates against power iteration (L1 and top-10 overlap);
+`--check` turns that report into a hard gate (non-zero exit on miss) for
+CI smoke legs.
 
 Telemetry printed for `--algo improved` and `--algo directed` (also
 available on the returned `ImprovedDistResult`/`DirectedDistResult`):
@@ -61,16 +69,22 @@ from repro.runtime import FailureSchedule, Supervisor
 import jax.numpy as jnp
 
 
-def _report_accuracy(pi, g, eps: float) -> None:
+def _report_accuracy(pi, g, eps: float, check: bool = False,
+                     l1_tol: float = 0.15, topk_min: float = 0.6) -> None:
     pi = np.asarray(pi, dtype=np.float64)
     pi_ref, _, _ = power_iteration(g, eps)
-    print(f"[pagerank] L1 vs power-iter: "
-          f"{l1_error(pi / pi.sum(), pi_ref):.4f}  "
-          f"top-10 overlap: {topk_overlap(pi, np.asarray(pi_ref)):.2f}")
+    l1 = l1_error(pi / pi.sum(), pi_ref)
+    topk = topk_overlap(pi, np.asarray(pi_ref))
+    print(f"[pagerank] L1 vs power-iter: {l1:.4f}  "
+          f"top-10 overlap: {topk:.2f}")
+    if check and (l1 >= l1_tol or topk < topk_min):
+        raise SystemExit(
+            f"[pagerank] accuracy check FAILED: L1 {l1:.4f} "
+            f"(tol {l1_tol}) top-10 {topk:.2f} (min {topk_min})")
 
 
 def run_walks(g, eps: float, walks_per_node: int, checkpoint_dir,
-              fail_at, seed: int):
+              fail_at, seed: int, resume: bool = False):
     devs = np.array(jax.devices())
     mesh = Mesh(devs, (AXIS,))
     shards = devs.size
@@ -108,7 +122,7 @@ def run_walks(g, eps: float, walks_per_node: int, checkpoint_dir,
                      Checkpointer(ckpt_dir), checkpoint_every=10,
                      failure_schedule=FailureSchedule(fail_at) if fail_at
                      else None)
-    res = sup.run(state)
+    res = sup.run(state, resume=resume)
     zeta = np.asarray(res.state.zeta).reshape(-1)[: g.n]
     pi = zeta.astype(np.float64) * eps / (g.n * walks_per_node)
     print(f"[pagerank] algo=walks n={g.n} shards={shards} "
@@ -119,29 +133,35 @@ def run_walks(g, eps: float, walks_per_node: int, checkpoint_dir,
 
 def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
         checkpoint_dir: str | None, fail_at: list[int], seed: int = 0,
-        algo: str = "walks"):
-    g = GENERATORS[graph_kind](n, 6.0, seed) if graph_kind != "ring" \
+        algo: str = "walks", avg_deg: float = 6.0, resume: bool = False,
+        check: bool = False):
+    if resume and not checkpoint_dir:
+        raise SystemExit("[pagerank] --resume needs --checkpoint-dir "
+                         "(there is no snapshot to cold-start from)")
+    g = GENERATORS[graph_kind](n, avg_deg, seed) if graph_kind != "ring" \
         else GENERATORS[graph_kind](n)
-    if algo != "walks" and (checkpoint_dir or fail_at):
-        print(f"[pagerank] WARNING: --checkpoint-dir/--fail-at only apply "
-              f"to --algo walks (the supervised engine); ignored for "
-              f"algo={algo}")
     if algo == "walks":
-        pi = run_walks(g, eps, walks_per_node, checkpoint_dir, fail_at, seed)
+        pi = run_walks(g, eps, walks_per_node, checkpoint_dir, fail_at,
+                       seed, resume=resume)
     elif algo == "counts":
-        res = distributed_pagerank_counts(g, eps, walks_per_node,
-                                          jax.random.PRNGKey(seed))
+        res = distributed_pagerank_counts(
+            g, eps, walks_per_node, jax.random.PRNGKey(seed),
+            checkpoint_dir=checkpoint_dir, fail_at=fail_at, resume=resume)
         print(f"[pagerank] algo=counts n={g.n} shards={res.shards} "
-              f"rounds={res.rounds} lane_cap={res.lane_cap} "
+              f"rounds={res.rounds} restarts={res.restarts} "
+              f"lane_cap={res.lane_cap} "
               f"a2a_bytes={res.a2a_bytes_total} overflow={res.overflow}")
         pi = res.pi
     elif algo in ("improved", "directed"):
         engine = (distributed_improved_pagerank if algo == "improved"
                   else distributed_directed_pagerank)
-        res = engine(g, eps, walks_per_node, jax.random.PRNGKey(seed))
+        res = engine(g, eps, walks_per_node, jax.random.PRNGKey(seed),
+                     checkpoint_dir=checkpoint_dir, fail_at=fail_at,
+                     resume=resume)
         print(f"[pagerank] algo={algo} n={g.n} shards={res.shards} "
               f"lam={res.lam} eta={res.eta} ell={res.ell} "
-              f"rounds={res.rounds} (p1={res.phase1_rounds} "
+              f"rounds={res.rounds} restarts={res.restarts} "
+              f"(p1={res.phase1_rounds} "
               f"report={res.report_rounds} p2={res.phase2_rounds} "
               f"p3={res.phase3_rounds} tail={res.tail_rounds})")
         print(f"[pagerank] coupons created={res.coupons_created} "
@@ -155,7 +175,7 @@ def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
         pi = res.pi
     else:
         raise ValueError(f"unknown algo {algo!r}")
-    _report_accuracy(pi, g, eps)
+    _report_accuracy(pi, g, eps, check=check)
     return pi
 
 
@@ -164,15 +184,26 @@ def main():
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--eps", type=float, default=0.2)
     ap.add_argument("--walks", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="graph-generator and PRNG seed")
+    ap.add_argument("--avg-deg", type=float, default=6.0,
+                    help="generator degree parameter (ignored by ring)")
     ap.add_argument("--graph", default="erdos_renyi",
                     choices=sorted(GENERATORS))
     ap.add_argument("--algo", default="walks",
                     choices=["walks", "counts", "improved", "directed"])
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--resume", action="store_true",
+                    help="cold-start from the latest snapshot in "
+                         "--checkpoint-dir instead of round 0")
+    ap.add_argument("--check", action="store_true",
+                    help="non-zero exit if the accuracy report misses "
+                         "L1 < 0.15 / top-10 >= 0.6 (CI smoke gate)")
     args = ap.parse_args()
     run(args.n, args.eps, args.walks, args.graph, args.checkpoint_dir,
-        args.fail_at, algo=args.algo)
+        args.fail_at, seed=args.seed, algo=args.algo, avg_deg=args.avg_deg,
+        resume=args.resume, check=args.check)
 
 
 if __name__ == "__main__":

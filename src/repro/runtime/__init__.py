@@ -1,6 +1,10 @@
 from repro.runtime.fault_tolerance import (FailureSchedule, Heartbeat,
-                                           SimulatedFailure, Supervisor,
-                                           SupervisorResult)
+                                           SimulatedFailure, Stage,
+                                           StagedState, StageSchedule,
+                                           Supervisor, SupervisorResult,
+                                           run_staged, staged_from_host,
+                                           staged_to_host)
 
-__all__ = ["FailureSchedule", "Heartbeat", "SimulatedFailure", "Supervisor",
-           "SupervisorResult"]
+__all__ = ["FailureSchedule", "Heartbeat", "SimulatedFailure", "Stage",
+           "StagedState", "StageSchedule", "Supervisor", "SupervisorResult",
+           "run_staged", "staged_from_host", "staged_to_host"]

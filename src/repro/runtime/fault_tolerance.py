@@ -14,16 +14,26 @@ PageRank super-step loop, or the training loop) with:
     rounds slower than `straggler_factor` × running median are flagged.
     (Real deployments feed these flags into the engine's `work_cap`
     rebalancing — here they are surfaced as stats.)
+
+Multi-stage schedules: engines whose run is a *sequence of named phases*
+with different step functions and different device buffers per phase (the
+3-phase stitching engines) compose per-phase step functions with
+`StageSchedule` into one supervisor-drivable step function over a
+stage-tagged `StagedState`. Snapshots carry the stage tag, the stage's
+device buffers, and the host-side telemetry accumulators, so a killed run
+resumes mid-phase and replays the identical trajectory.
 """
 from __future__ import annotations
 
 import dataclasses
+import shutil
+import tempfile
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import Checkpointer, pack_json, unpack_json
 
 
 class SimulatedFailure(RuntimeError):
@@ -58,6 +68,90 @@ class Heartbeat:
 
 
 @dataclasses.dataclass
+class Stage:
+    """One named phase of a multi-stage engine.
+
+    `step(state) -> (state, stage_done)` runs one super-step of this phase;
+    `on_done(state) -> state` is the host-side transition that rebuilds the
+    device buffers for the next phase (initial placements, bitmap
+    broadcasts, ...) once the phase reports done.
+    """
+
+    name: str
+    step: Callable[[Any], Tuple[Any, bool]]
+    on_done: Optional[Callable[[Any], Any]] = None
+
+
+@dataclasses.dataclass
+class StagedState:
+    """Machine state threaded through a `StageSchedule`: the tag of the
+    stage currently running, that stage's device buffers (a flat
+    name -> array dict), and JSON-able host accumulators (round counters,
+    wire volumes, per-round records). Snapshots carry all three."""
+
+    stage: str
+    arrays: Dict[str, Any]
+    host: Dict[str, Any]
+
+
+class StageSchedule:
+    """Compose per-phase step functions into ONE supervisor-drivable step
+    function over a stage-tagged `StagedState`.
+
+    Each call runs one super-step of the current stage; when a stage
+    reports done its `on_done` transition fires and the machine advances
+    to the next stage in order. The composed step function returns
+    done=True only when the last stage completes, so the global round
+    index seen by `Supervisor` (checkpoint cadence, `FailureSchedule`
+    rounds) spans all phases.
+    """
+
+    def __init__(self, stages: List[Stage]):
+        if not stages:
+            raise ValueError("empty stage schedule")
+        names = [s.name for s in stages]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate stage names: {names}")
+        self.stages = stages
+        self._index = {s.name: i for i, s in enumerate(stages)}
+
+    @property
+    def first_stage(self) -> str:
+        return self.stages[0].name
+
+    def step(self, state: StagedState) -> Tuple[StagedState, bool]:
+        i = self._index[state.stage]
+        stage = self.stages[i]
+        state, stage_done = stage.step(state)
+        if not stage_done:
+            return state, False
+        if stage.on_done is not None:
+            state = stage.on_done(state)
+        if i + 1 == len(self.stages):
+            return state, True
+        state.stage = self.stages[i + 1].name
+        return state, False
+
+
+def staged_to_host(state: StagedState) -> dict:
+    """Checkpoint payload for a `StagedState`: a pure pytree of arrays —
+    device buffers as-is, stage tag + host accumulators as JSON leaves."""
+    return dict(arrays={k: np.asarray(v) for k, v in state.arrays.items()},
+                stage=pack_json(state.stage), host=pack_json(state.host))
+
+
+def staged_from_host(flat: Dict[str, np.ndarray],
+                     put: Callable[[str, np.ndarray], Any]) -> StagedState:
+    """Rebuild a `StagedState` from a restored flat checkpoint dict.
+    `put(name, host_array) -> device array` re-establishes each buffer's
+    sharding (the stage layouts are engine knowledge)."""
+    arrays = {k.split("/", 1)[1]: put(k.split("/", 1)[1], v)
+              for k, v in flat.items() if k.startswith("arrays/")}
+    return StagedState(stage=unpack_json(flat["stage"]), arrays=arrays,
+                       host=unpack_json(flat["host"]))
+
+
+@dataclasses.dataclass
 class SupervisorResult:
     state: Any
     rounds: int
@@ -88,13 +182,34 @@ class Supervisor:
         self.failures = failure_schedule
         self.heartbeat = Heartbeat()
 
-    def run(self, state: Any, *, max_rounds: int = 100_000) -> SupervisorResult:
+    def run(self, state: Any, *, max_rounds: int = 100_000,
+            resume: bool = False) -> SupervisorResult:
         restarts = 0
         ckpts = 0
         round_idx = 0
-        # round-0 checkpoint so recovery is always possible
-        self.ckpt.save(0, self.to_host(state), blocking=True)
-        ckpts += 1
+        if resume:
+            # cold start from a previous (killed) run's latest snapshot;
+            # an empty dir is an error, not a silent fresh run — a typo'd
+            # path must not quietly discard the resume intent
+            if self.ckpt.latest_step() is None:
+                raise FileNotFoundError(
+                    f"resume requested but no snapshots under "
+                    f"{self.ckpt.base_dir}")
+            flat, manifest = self.ckpt.restore()
+            state = self.from_host(flat)
+            round_idx = int(manifest["step"])
+        else:
+            # fresh run: refuse a directory that already holds snapshots —
+            # recovery must never restore foreign state, and silently
+            # wiping them would destroy another run's recovery points
+            if self.ckpt.latest_step() is not None:
+                raise FileExistsError(
+                    f"{self.ckpt.base_dir} already holds snapshots; pass "
+                    f"resume=True to continue that run, or clear the "
+                    f"directory (Checkpointer.clear()) to start fresh")
+            # round-0 checkpoint so recovery is always possible
+            self.ckpt.save(0, self.to_host(state), blocking=True)
+            ckpts += 1
         while round_idx < max_rounds:
             t0 = time.perf_counter()
             try:
@@ -121,3 +236,46 @@ class Supervisor:
         return SupervisorResult(state=state, rounds=round_idx, restarts=restarts,
                                 checkpoints_written=ckpts,
                                 stragglers=self.heartbeat.stragglers)
+
+
+def run_staged(schedule: StageSchedule, state: StagedState,
+               put: Callable[[str, np.ndarray], Any], *,
+               checkpoint_dir: Optional[str] = None,
+               fail_at: Optional[Sequence[int]] = None,
+               checkpoint_every: int = 10, max_restarts: int = 16,
+               resume: bool = False, max_rounds: int = 100_000,
+               tmp_prefix: str = "staged_ckpt_") -> Tuple[StagedState, int,
+                                                          int]:
+    """Drive a `StageSchedule` to completion: plain loop when no fault
+    tolerance is requested, otherwise under the checkpoint-restart
+    `Supervisor` with stage-tagged `staged_to_host` snapshots.
+
+    `put(name, host_array)` re-establishes per-buffer sharding on restore.
+    Returns (final state, restarts, checkpoints_written)."""
+    if resume and checkpoint_dir is None:
+        raise ValueError("resume=True needs checkpoint_dir (there is no "
+                         "snapshot to cold-start from)")
+    if checkpoint_dir is None and not fail_at:
+        rounds = 0
+        done = False
+        while not done and rounds < max_rounds:   # same bound as Supervisor
+            state, done = schedule.step(state)
+            rounds += 1
+        return state, 0, 0
+    # fail_at without a caller dir: snapshots go to a private temp dir the
+    # caller has no handle to, so remove it once the run is over
+    tmp_dir = tempfile.mkdtemp(prefix=tmp_prefix) \
+        if checkpoint_dir is None else None
+    try:
+        sup = Supervisor(
+            schedule.step, staged_to_host,
+            lambda flat: staged_from_host(flat, put),
+            Checkpointer(checkpoint_dir or tmp_dir),
+            checkpoint_every=checkpoint_every, max_restarts=max_restarts,
+            failure_schedule=FailureSchedule(list(fail_at)) if fail_at
+            else None)
+        res = sup.run(state, max_rounds=max_rounds, resume=resume)
+    finally:
+        if tmp_dir is not None:
+            shutil.rmtree(tmp_dir, ignore_errors=True)
+    return res.state, res.restarts, res.checkpoints_written

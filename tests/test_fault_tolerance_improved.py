@@ -1,0 +1,248 @@
+"""Fault-injection regression coverage for the 3-phase phase-machine.
+
+Kill the supervised engines at a phase boundary and mid-Phase-2 — for both
+`improved` (Algorithm 2) and `directed` (Section 5) — and at mid-run for
+the counts engine: the recovered run must return bit-identical `zeta`/`pi`
+and identical round/wire telemetry vs an unfailed run. Phase-3 already
+depends on deterministic re-execution of Phase 1, so exactness is a hard
+invariant here, not a statistical one. A cross-process-style kill
+(max_restarts=0 leaves snapshots behind) followed by `resume=True` must
+also reproduce the unfailed run bit-exactly.
+
+The engine runs live in one subprocess honoring REPRO_TEST_DEVICES (the
+device count is process-global); the `StageSchedule`/JSON-leaf machinery
+is additionally unit-tested in-process, jax-free.
+"""
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import run_forced_devices
+
+ENGINE_CODE = textwrap.dedent("""
+    import json, tempfile, jax, numpy as np
+    from repro.core.distributed_counts import distributed_pagerank_counts
+    from repro.core.distributed_directed import distributed_directed_pagerank
+    from repro.core.distributed_improved import distributed_improved_pagerank
+    from repro.graphs import directed_web, erdos_renyi
+    from repro.runtime import SimulatedFailure
+
+    def telemetry(r):
+        return dict(rounds=r.rounds, p1=r.phase1_rounds,
+                    rep=r.report_rounds, p2=r.phase2_rounds,
+                    p3=r.phase3_rounds, tail=r.tail_rounds,
+                    wire=dict(r.a2a_bytes_by_phase), dropped=r.dropped,
+                    waited=r.waited, used=r.coupons_used,
+                    created=r.coupons_created, tail_walks=r.tail_walks,
+                    exhausted=r.exhausted_walks,
+                    terminated=r.terminated_by_coupon,
+                    records=r.phase2_records)
+
+    out = {}
+    CASES = dict(
+        improved=(distributed_improved_pagerank,
+                  erdos_renyi(64, 5.0, seed=1), 40, 0),
+        directed=(distributed_directed_pagerank,
+                  directed_web(64, 5.0, seed=3), 20, 1))
+    for name, (engine, g, K, seed) in CASES.items():
+        ref = engine(g, 0.25, K, jax.random.PRNGKey(seed))
+        # global rounds span the phases: fail once exactly at the
+        # phase1 -> report boundary, once mid-Phase-2
+        boundary = ref.phase1_rounds
+        mid_p2 = (ref.phase1_rounds + ref.report_rounds
+                  + max(ref.phase2_rounds // 2, 1))
+        with tempfile.TemporaryDirectory() as d:
+            rec = engine(g, 0.25, K, jax.random.PRNGKey(seed),
+                         checkpoint_dir=d, fail_at=[boundary, mid_p2],
+                         checkpoint_every=3)
+        out[name] = dict(
+            restarts=rec.restarts, ckpts=rec.checkpoints_written,
+            fail_at=[boundary, mid_p2],
+            zeta_equal=bool(np.array_equal(np.asarray(ref.zeta),
+                                           np.asarray(rec.zeta))),
+            pi_equal=bool(np.array_equal(np.asarray(ref.pi),
+                                         np.asarray(rec.pi))),
+            ref_tel=telemetry(ref), rec_tel=telemetry(rec))
+
+    # cross-process-style kill: max_restarts=0 turns the first injected
+    # failure fatal (snapshots survive), then a fresh engine call resumes
+    # cold from the latest stage-tagged snapshot
+    engine, g, K, seed = CASES["improved"]
+    ref = engine(g, 0.25, K, jax.random.PRNGKey(seed))
+    mid_p2 = (ref.phase1_rounds + ref.report_rounds
+              + max(ref.phase2_rounds // 2, 1))
+    with tempfile.TemporaryDirectory() as d:
+        died = False
+        try:
+            engine(g, 0.25, K, jax.random.PRNGKey(seed), checkpoint_dir=d,
+                   fail_at=[mid_p2], checkpoint_every=3, max_restarts=0)
+        except SimulatedFailure:
+            died = True
+        res = engine(g, 0.25, K, jax.random.PRNGKey(seed),
+                     checkpoint_dir=d, resume=True, checkpoint_every=3)
+    out["resume"] = dict(
+        died=died,
+        zeta_equal=bool(np.array_equal(np.asarray(ref.zeta),
+                                       np.asarray(res.zeta))),
+        telemetry_equal=telemetry(ref) == telemetry(res))
+
+    # counts engine (single-stage schedule) under the same supervisor
+    g = erdos_renyi(64, 5.0, seed=1)
+    refc = distributed_pagerank_counts(g, 0.25, 40, jax.random.PRNGKey(2))
+    with tempfile.TemporaryDirectory() as d:
+        recc = distributed_pagerank_counts(
+            g, 0.25, 40, jax.random.PRNGKey(2), checkpoint_dir=d,
+            fail_at=[5], checkpoint_every=3)
+    out["counts"] = dict(
+        restarts=recc.restarts,
+        zeta_equal=bool(np.array_equal(np.asarray(refc.zeta),
+                                       np.asarray(recc.zeta))),
+        rounds_equal=refc.rounds == recc.rounds,
+        a2a_equal=refc.a2a_bytes_total == recc.a2a_bytes_total)
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def payload():
+    return run_forced_devices(ENGINE_CODE)
+
+
+@pytest.mark.parametrize("engine", ["improved", "directed"])
+def test_recovery_bit_exact(engine, payload):
+    """Phase-boundary + mid-Phase-2 kills: the recovered run is the
+    unfailed run, bit for bit, telemetry included."""
+    r = payload[engine]
+    assert r["restarts"] == 2, r
+    assert r["zeta_equal"] and r["pi_equal"], r
+    assert r["rec_tel"] == r["ref_tel"], (engine, r["fail_at"])
+    assert r["rec_tel"]["dropped"] == 0, r
+    assert r["ckpts"] >= 2, r  # round-0 plus at least one periodic
+
+
+def test_cold_resume_after_kill(payload):
+    """max_restarts=0 kill leaves snapshots; resume=True completes the run
+    and matches the unfailed run exactly."""
+    r = payload["resume"]
+    assert r["died"], r
+    assert r["zeta_equal"], r
+    assert r["telemetry_equal"], r
+
+
+def test_counts_recovery_bit_exact(payload):
+    r = payload["counts"]
+    assert r["restarts"] == 1, r
+    assert r["zeta_equal"] and r["rounds_equal"] and r["a2a_equal"], r
+
+
+# ---------------------------------------------------------------------------
+# in-process units: schedule composition + snapshot JSON leaves (jax-free)
+# ---------------------------------------------------------------------------
+
+def test_stage_schedule_orders_stages_and_runs_transitions():
+    from repro.runtime import Stage, StagedState, StageSchedule
+
+    log = []
+
+    def stepper(tag, steps):
+        def step(ms):
+            ms.host[tag] = ms.host.get(tag, 0) + 1
+            log.append(tag)
+            return ms, ms.host[tag] >= steps
+        return step
+
+    def transition(ms):
+        log.append("switch")
+        return ms
+
+    sched = StageSchedule([Stage("a", stepper("a", 2), on_done=transition),
+                           Stage("b", stepper("b", 1))])
+    ms = StagedState(stage=sched.first_stage, arrays={}, host={})
+    done = False
+    rounds = 0
+    while not done:
+        ms, done = sched.step(ms)
+        rounds += 1
+    assert log == ["a", "a", "switch", "b"]
+    assert rounds == 3
+    with pytest.raises(ValueError):
+        StageSchedule([Stage("x", stepper("x", 1)),
+                       Stage("x", stepper("x", 1))])
+
+
+def test_fresh_run_refuses_stale_snapshots(tmp_path):
+    """A fresh (resume=False) run into a dir that already holds snapshots
+    must refuse to start — recovering from a previous run's snapshot would
+    restore foreign state, and silently wiping it would destroy that run's
+    recovery points. Checkpointer.clear() is the explicit opt-out."""
+    from repro.checkpoint import Checkpointer
+    from repro.runtime import (Stage, StagedState, StageSchedule,
+                               run_staged, staged_to_host)
+
+    stale = StagedState(stage="s", arrays={}, host=dict(count=999))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(50, staged_to_host(stale))
+
+    def step(ms):
+        ms.host["count"] += 1
+        return ms, ms.host["count"] >= 5
+
+    sched = StageSchedule([Stage("s", step)])
+
+    def fresh():
+        return StagedState(stage=sched.first_stage, arrays={},
+                           host=dict(count=0))
+
+    with pytest.raises(FileExistsError, match="already holds snapshots"):
+        run_staged(sched, fresh(), lambda n, a: a,
+                   checkpoint_dir=str(tmp_path), fail_at=[2],
+                   checkpoint_every=10)
+    ck.clear()
+    out, restarts, _ = run_staged(sched, fresh(), lambda n, a: a,
+                                  checkpoint_dir=str(tmp_path),
+                                  fail_at=[2], checkpoint_every=10)
+    assert restarts == 1
+    assert out.host["count"] == 5     # its own trajectory, not the stale 999
+
+
+def test_resume_without_checkpoint_dir_raises():
+    from repro.runtime import (Stage, StagedState, StageSchedule,
+                               run_staged)
+    sched = StageSchedule([Stage("s", lambda ms: (ms, True))])
+    ms = StagedState(stage="s", arrays={}, host={})
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        run_staged(sched, ms, lambda n, a: a, resume=True)
+
+
+def test_resume_from_empty_dir_raises(tmp_path):
+    """A typo'd --checkpoint-dir must not silently recompute from round 0:
+    resume against a snapshot-less directory is an error."""
+    from repro.runtime import (Stage, StagedState, StageSchedule,
+                               run_staged)
+    sched = StageSchedule([Stage("s", lambda ms: (ms, True))])
+    ms = StagedState(stage="s", arrays={}, host={})
+    with pytest.raises(FileNotFoundError, match="no snapshots"):
+        run_staged(sched, ms, lambda n, a: a, resume=True,
+                   checkpoint_dir=str(tmp_path / "typo"))
+
+
+def test_staged_snapshot_roundtrip(tmp_path):
+    from repro.checkpoint import Checkpointer
+    from repro.runtime import StagedState, staged_from_host, staged_to_host
+
+    ms = StagedState(stage="phase2",
+                     arrays=dict(pos=np.arange(6, dtype=np.int32),
+                                 used=np.ones((2, 3), np.int32)),
+                     host=dict(rounds=7, wire=dict(phase1=40),
+                               traces=[[3, 2], [0, 1]]))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, staged_to_host(ms))
+    flat, manifest = ck.restore()
+    back = staged_from_host(flat, lambda name, arr: arr)
+    assert manifest["step"] == 7
+    assert back.stage == "phase2"
+    assert back.host == ms.host
+    assert sorted(back.arrays) == ["pos", "used"]
+    np.testing.assert_array_equal(back.arrays["pos"], ms.arrays["pos"])
+    np.testing.assert_array_equal(back.arrays["used"], ms.arrays["used"])
