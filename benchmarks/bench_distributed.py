@@ -13,9 +13,32 @@ round-speedup column. Emitted columns per engine: wall time, total rounds,
 phase-round breakdown (3-phase engines: p1/report/p2/p3/tail), and wire
 volume (total all_to_all payload bytes, by phase for the 3-phase engines).
 
+Each engine is invoked twice with identical shapes and a different PRNG
+key: the FIRST call pays XLA compilation of every superstep program (the
+3-phase engines compile three stage programs to Algorithm 1's one; the
+step makers are memoized, so the compile is once per process, not per
+call), the SECOND reuses the jit cache and measures the steady-state
+run. The headline `*_us` column is the steady-state time; `*_cold_us`
+keeps the compile-inclusive first call honest next to it.
+
+Caveat on reading the wall-clock columns: the P "devices" are virtual —
+they share one CPU, so each round's per-shard compute runs serialized
+and wall time rewards low TOTAL compute, not low round count. That
+flatters the count-state Algorithm-1 engine (an O(n_loc * max_deg)
+histogram push per round) over the 3-phase engines (per-coupon pool
+tables), and prices the network at zero. The round and wire columns are
+the paper-relevant measures; the wall-clock columns are honest about
+what this simulation actually pays.
+
 `--json [PATH]` additionally writes the raw rows to a machine-readable
 artifact (default BENCH_distributed.json) so the perf trajectory can be
 tracked across PRs.
+
+Every row carries each engine's drop counter (`*_dropped`; the counts
+engine reports lane `overflow`). A benchmark that drops walks is not
+measuring the algorithm, so the process exits nonzero if ANY engine
+reports a nonzero drop count — wire/round numbers from a lossy run must
+never land in the artifact unflagged.
 """
 from __future__ import annotations
 
@@ -43,25 +66,28 @@ def coupons(r):
     return dict(created=r.coupons_created, used=r.coupons_used,
                 exhausted=r.exhausted_walks)
 
+def timed(fn, seed):
+    # cold call compiles every superstep program; the warm call (same
+    # shapes, fresh key) reuses the jit cache = steady-state run time
+    t0 = time.time(); fn(jax.random.PRNGKey(seed)); cold = time.time() - t0
+    t0 = time.time(); r = fn(jax.random.PRNGKey(seed + 1))
+    return r, (time.time() - t0) * 1e6, cold * 1e6
+
 g = erdos_renyi(200, 6.0, seed=3)
 out = []
 for K in (100, 400):
-    t0 = time.time()
-    rw = distributed_pagerank(g, 0.2, K, jax.random.PRNGKey(0))
-    tw = time.time() - t0
-    t0 = time.time()
-    rc = distributed_pagerank_counts(g, 0.2, K, jax.random.PRNGKey(1))
-    tc = time.time() - t0
-    t0 = time.time()
-    ri = distributed_improved_pagerank(g, 0.2, K, jax.random.PRNGKey(2))
-    ti = time.time() - t0
+    rw, tw, cw = timed(lambda k: distributed_pagerank(g, 0.2, K, k), 10)
+    rc, tc, cc = timed(
+        lambda k: distributed_pagerank_counts(g, 0.2, K, k), 20)
+    ri, ti, ci = timed(
+        lambda k: distributed_improved_pagerank(g, 0.2, K, k), 30)
     out.append(dict(K=K, shards=rw.shards,
                     walk_a2a=rw.a2a_bytes_total, walk_rounds=rw.rounds,
-                    walk_us=tw * 1e6,
+                    walk_us=tw, walk_cold_us=cw, walk_dropped=rw.dropped,
                     count_a2a=rc.a2a_bytes_total, count_rounds=rc.rounds,
-                    count_us=tc * 1e6,
+                    count_us=tc, count_cold_us=cc, count_dropped=rc.overflow,
                     imp_a2a=ri.a2a_bytes_total, imp_rounds=ri.rounds,
-                    imp_us=ti * 1e6,
+                    imp_us=ti, imp_cold_us=ci, imp_dropped=ri.dropped,
                     imp_phases=phases(ri), imp_wire=ri.a2a_bytes_by_phase,
                     imp_coupons=coupons(ri)))
 
@@ -70,18 +96,16 @@ for K in (100, 400):
 # the 2*W/P CONGEST sizing)
 gd = directed_web(200, 6.0, seed=3)
 K = 50
-t0 = time.time()
-rdw = distributed_pagerank(gd, 0.2, K, jax.random.PRNGKey(3),
-                           cap=gd.n * K + 8 * 64)
-tdw = time.time() - t0
-t0 = time.time()
-rd = distributed_directed_pagerank(gd, 0.2, K, jax.random.PRNGKey(4))
-td = time.time() - t0
+rdw, tdw, cdw = timed(
+    lambda k: distributed_pagerank(gd, 0.2, K, k, cap=gd.n * K + 8 * 64),
+    40)
+rd, td, cd = timed(
+    lambda k: distributed_directed_pagerank(gd, 0.2, K, k), 50)
 out.append(dict(K=K, shards=rd.shards, directed=True,
                 walk_a2a=rdw.a2a_bytes_total, walk_rounds=rdw.rounds,
-                walk_us=tdw * 1e6,
+                walk_us=tdw, walk_cold_us=cdw, walk_dropped=rdw.dropped,
                 dir_a2a=rd.a2a_bytes_total, dir_rounds=rd.rounds,
-                dir_us=td * 1e6,
+                dir_us=td, dir_cold_us=cd,
                 dir_phases=phases(rd), dir_wire=rd.a2a_bytes_by_phase,
                 dir_coupons=coupons(rd),
                 dir_budget=rd.uniform_budget, dir_dropped=rd.dropped))
@@ -123,8 +147,10 @@ def report(rows):
         if r.get("directed"):
             cp = r["dir_coupons"]
             print(f"dist_dirwalk_P{p}_K{k},{r['walk_us']:.0f},"
+                  f"cold_us={r['walk_cold_us']:.0f};"
                   f"rounds={r['walk_rounds']};a2a_bytes={r['walk_a2a']}")
             print(f"dist_directed_P{p}_K{k},{r['dir_us']:.0f},"
+                  f"cold_us={r['dir_cold_us']:.0f};"
                   f"rounds={r['dir_rounds']};"
                   f"phases={_phase_str(r['dir_phases'])};"
                   f"{_wire_str(r['dir_wire'])};"
@@ -134,18 +160,37 @@ def report(rows):
                   f"{r['walk_rounds'] / max(r['dir_rounds'], 1):.2f}x")
             continue
         print(f"dist_walk_P{p}_K{k},{r['walk_us']:.0f},"
+              f"cold_us={r['walk_cold_us']:.0f};"
               f"rounds={r['walk_rounds']};a2a_bytes={r['walk_a2a']}")
         print(f"dist_count_P{p}_K{k},{r['count_us']:.0f},"
+              f"cold_us={r['count_cold_us']:.0f};"
               f"rounds={r['count_rounds']};a2a_bytes={r['count_a2a']};"
               f"reduction={r['walk_a2a']/max(r['count_a2a'],1):.1f}x")
         cp = r["imp_coupons"]
         print(f"dist_improved_P{p}_K{k},{r['imp_us']:.0f},"
+              f"cold_us={r['imp_cold_us']:.0f};"
               f"rounds={r['imp_rounds']};"
               f"phases={_phase_str(r['imp_phases'])};"
               f"{_wire_str(r['imp_wire'])};"
               f"coupons_used={cp['used']}/{cp['created']};"
               f"exhausted={cp['exhausted']};"
-              f"round_speedup={r['walk_rounds']/max(r['imp_rounds'],1):.2f}x")
+              f"round_speedup={r['walk_rounds']/max(r['imp_rounds'],1):.2f}x;"
+              f"us_speedup_vs_count={r['count_us']/max(r['imp_us'],1):.2f}x")
+
+
+def check_dropped(rows):
+    """Collect (row-label, counter, value) for every nonzero drop count."""
+    bad = []
+    for r in rows:
+        if "error" in r:
+            bad.append((f"shards={r['shards']}", "error", r["error"]))
+            continue
+        label = f"P{r['shards']}_K{r['K']}"
+        for field in ("walk_dropped", "count_dropped", "imp_dropped",
+                      "dir_dropped"):
+            if r.get(field):
+                bad.append((label, field, r[field]))
+    return bad
 
 
 def main(argv=None):
@@ -163,6 +208,12 @@ def main(argv=None):
             json.dump(dict(schema=1, bench="distributed_engines",
                            shard_counts=args.shards, rows=rows), f, indent=2)
         print(f"[bench] wrote {args.json} ({len(rows)} rows)")
+    bad = check_dropped(rows)
+    if bad:
+        for label, field, value in bad:
+            print(f"[bench] DROPPED: {label} {field}={value}",
+                  file=sys.stderr)
+        raise SystemExit(1)
     return rows
 
 

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
+from functools import lru_cache, partial
 from typing import List, Optional
 
 import jax
@@ -34,10 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.estimator import pagerank_from_visits
 from repro.core.graph import CSRGraph
 from repro.core.routing import (advance_owned, count_owned_arrivals,
                                 merge_walks, rank_within, route_walks,
                                 shard_map)
+from repro.kernels import resolve_use_pallas
 
 AXIS = "shards"
 
@@ -96,7 +98,8 @@ class DistState:
 
 
 def _superstep_local(rp, ci, dg, pos, key, zeta, eps: float, n_loc: int,
-                     shards: int, route_cap: int, work_cap: int):
+                     shards: int, route_cap: int, work_cap: int,
+                     use_pallas: bool = False):
     """One super-step on a single shard (runs under shard_map).
 
     Inputs arrive with a leading size-1 shard dim (shard_map blocks);
@@ -106,12 +109,13 @@ def _superstep_local(rp, ci, dg, pos, key, zeta, eps: float, n_loc: int,
     shard_id = jax.lax.axis_index(AXIS)
 
     # ---- route: send non-owned walks, up to route_cap per target ----
-    kept, _, recv, _, waited, sent = route_walks(
+    kept, _, recv, _, waited, _, sent_bytes = route_walks(
         pos, {}, axis=AXIS, shard_id=shard_id, n_loc=n_loc, shards=shards,
         route_cap=route_cap)
     arrived = recv >= 0
     # count arrivals (they are owned by me by construction)
-    zeta = zeta + count_owned_arrivals(arrived, recv, shard_id, n_loc)
+    zeta = zeta + count_owned_arrivals(arrived, recv, shard_id, n_loc,
+                                       use_pallas=use_pallas)
 
     # ---- merge buffer: kept walks + arrivals, compact into cap slots ----
     pos, _, dropped = merge_walks(kept, {}, recv, {}, pos.shape[0])
@@ -124,25 +128,34 @@ def _superstep_local(rp, ci, dg, pos, key, zeta, eps: float, n_loc: int,
     owned_rank, _ = rank_within(jnp.where(owned, 0, 1).astype(jnp.int32))
     stepped = owned & (owned_rank < work_cap) if work_cap else owned
     survive, dst = advance_owned(rp, ci, dg, pos, stepped, k_term, k_edge,
-                                 eps, shard_id, n_loc)
+                                 eps, shard_id, n_loc,
+                                 use_pallas=use_pallas)
     new_pos = jnp.where(survive, dst, jnp.where(stepped, -1, pos))
     # intra-shard arrivals counted immediately
     local_arrival = survive & (dst // n_loc == shard_id)
-    zeta = zeta + count_owned_arrivals(local_arrival, dst, shard_id, n_loc)
+    zeta = zeta + count_owned_arrivals(local_arrival, dst, shard_id, n_loc,
+                                       use_pallas=use_pallas)
 
     # global (replicated) scalar stats
     active = jax.lax.psum(jnp.sum(new_pos >= 0), AXIS)
     dropped = jax.lax.psum(dropped, AXIS)
     waited = jax.lax.psum(waited, AXIS)
-    a2a_bytes = jax.lax.psum(sent * 4, AXIS)
+    a2a_bytes = jax.lax.psum(sent_bytes, AXIS)
     return (new_pos[None], key[None], zeta[None],
             active, dropped, waited, a2a_bytes)
 
 
+# memoized: equal (mesh, config) arguments produce byte-identical jitted
+# programs, and a fresh closure per engine call would recompile the
+# superstep on every invocation (jax interns Mesh, so the cache hits even
+# when callers rebuild the mesh over the same devices)
+@lru_cache(maxsize=64)
 def _make_superstep(mesh: Mesh, eps: float, n_loc: int, shards: int,
-                    route_cap: int, work_cap: int):
+                    route_cap: int, work_cap: int,
+                    use_pallas: bool = False):
     fn = partial(_superstep_local, eps=eps, n_loc=n_loc, shards=shards,
-                 route_cap=route_cap, work_cap=work_cap)
+                 route_cap=route_cap, work_cap=work_cap,
+                 use_pallas=use_pallas)
     sharded = shard_map(
         fn, mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
@@ -186,8 +199,14 @@ def distributed_pagerank(
     route_cap: Optional[int] = None,
     work_cap: int = 0,
     max_rounds: int = 100_000,
+    use_pallas: Optional[bool] = None,
 ) -> DistributedResult:
-    """Run Algorithm 1 across all devices of `mesh` (default: all devices)."""
+    """Run Algorithm 1 across all devices of `mesh` (default: all devices).
+
+    `use_pallas=None` defers to the REPRO_USE_PALLAS env var; True routes
+    the per-shard walk advancement and visit histograms through the Pallas
+    kernels (bit-identical to the jnp path, interpret mode off-TPU)."""
+    use_pallas = resolve_use_pallas(use_pallas)
     if mesh is None:
         devs = np.array(jax.devices())
         mesh = Mesh(devs, (AXIS,))
@@ -225,7 +244,8 @@ def distributed_pagerank(
     sg_dg = jax.device_put(sg.out_deg, spec)
 
     step = _make_superstep(mesh, float(eps), sg.n_loc, shards,
-                           int(route_cap), int(work_cap))
+                           int(route_cap), int(work_cap),
+                           use_pallas=use_pallas)
     a2a_total = 0
     rounds = 0
     round_active: List[int] = []
@@ -237,7 +257,7 @@ def distributed_pagerank(
         if int(active) == 0:
             break
     zeta = state.zeta.reshape(-1)[: graph.n]
-    pi = zeta.astype(jnp.float32) * (eps / (graph.n * walks_per_node))
+    pi = pagerank_from_visits(zeta, graph.n, walks_per_node, eps)
     return DistributedResult(
         zeta=zeta, pi=pi, rounds=rounds, dropped=int(state.dropped),
         waited=int(state.waited), a2a_bytes_total=a2a_total, shards=shards,

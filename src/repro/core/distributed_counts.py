@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional, Sequence
 
 import jax
@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.distributed import AXIS, shard_map
+from repro.core.estimator import pagerank_from_visits
 from repro.core.graph import CSRGraph
 from repro.core.routing import lane_slots
 from repro.runtime import Stage, StagedState, StageSchedule, run_staged
@@ -198,10 +199,14 @@ def _superstep(nbr, valid, deg, counts, key, zeta, *, eps: float,
             active, a2a_bytes, overflow)
 
 
-def make_count_superstep(mesh: Mesh, eps: float, sg: ShardedPaddedGraph,
-                         packed: bool = True):
-    fn = partial(_superstep, eps=eps, n_loc=sg.n_loc, shards=sg.shards,
-                 max_deg=sg.max_deg, lane_cap=sg.lane_cap, packed=packed)
+# memoized like the other engines' step makers: the graph's static layout
+# (n_loc/shards/max_deg/lane_cap) is the cache key, not the array payload,
+# so repeat runs over same-shaped graphs skip recompilation
+@lru_cache(maxsize=64)
+def make_count_superstep(mesh: Mesh, eps: float, *, n_loc: int, shards: int,
+                         max_deg: int, lane_cap: int, packed: bool = True):
+    fn = partial(_superstep, eps=eps, n_loc=n_loc, shards=shards,
+                 max_deg=max_deg, lane_cap=lane_cap, packed=packed)
     sharded = shard_map(
         fn, mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
@@ -261,7 +266,9 @@ def distributed_pagerank_counts(graph: CSRGraph, eps: float,
     valid = jax.device_put(sg.valid, spec)
     deg = jax.device_put(sg.deg, spec)
 
-    step = make_count_superstep(mesh, float(eps), sg, packed=packed)
+    step = make_count_superstep(mesh, float(eps), n_loc=sg.n_loc,
+                                shards=sg.shards, max_deg=sg.max_deg,
+                                lane_cap=sg.lane_cap, packed=packed)
 
     def _step(ms: StagedState):
         a = ms.arrays
@@ -295,7 +302,7 @@ def distributed_pagerank_counts(graph: CSRGraph, eps: float,
         tmp_prefix="prcnt_ckpt_")
 
     zeta = ms.arrays["zeta"].reshape(-1)[: graph.n]
-    pi = zeta.astype(jnp.float32) * (eps / (graph.n * walks_per_node))
+    pi = pagerank_from_visits(zeta, graph.n, walks_per_node, eps)
     return CountDistResult(zeta=zeta, pi=pi, rounds=ms.host["rounds"],
                            a2a_bytes_total=ms.host["a2a"],
                            overflow=ms.host["overflow"], shards=shards,

@@ -4,8 +4,8 @@ This fills the last cell of the ROADMAP engine matrix: the shard_map
 realization of the paper's Section-5 extension of IMPROVED-PAGERANK to
 directed graphs. It shares the entire 3-phase machinery with the
 Algorithm-2 engine (`distributed_improved._run_three_phase`, built on the
-lane/route/merge/exchange primitives in `routing.py`); what Section 5
-changes is the *budget policy* and the *round budget*, not the supersteps:
+lane/route/exchange primitives in `routing.py`); what Section 5 changes is
+the *budget policy* and the *round budget*, not the supersteps:
 
   Uniform coupon budgets. On a directed graph there is no Lemma-2 bound
     relating walk visits to d(v) (short PageRank walks are not near
@@ -13,10 +13,7 @@ changes is the *budget policy* and the *round budget*, not the supersteps:
     d(v)*eta. Every node instead precomputes the same
     eta*ceil(log n) short walks (`coupon_pool_sizes(...,
     degree_proportional=False)`), the LOCAL-model analogue of the paper's
-    "polynomially many coupons per node" — LOCAL rounds allow unbounded
-    messages, so overprovisioning costs no rounds; our fixed-capacity
-    buffers charge it to memory and all_to_all payload instead, which the
-    telemetry reports.
+    "polynomially many coupons per node".
 
   Longer short walks. With uniform budgets the optimal split of the
     length-ell long walk is lam = ceil(sqrt(log n / eps)) — the Section-5
@@ -25,17 +22,33 @@ changes is the *budget policy* and the *round budget*, not the supersteps:
 
   Directed out-edges only, dangling resets. Walks move along the CSR
     out-edges exactly as written (nothing is symmetrized), and a walk
-    arriving at a dangling node (out-degree 0) takes an immediate reset:
-    `routing.advance_owned` terminates it on the spot, the same
-    convention as `graph.transition_matrix` (dangling row = uniform
-    teleport), so the estimator stays consistent with power iteration.
+    arriving at a dangling node (out-degree 0) takes an immediate reset —
+    the owner-side aggregate sampler terminates the whole dangling row,
+    the same convention as `graph.transition_matrix` (dangling row =
+    uniform teleport), so the estimator stays consistent with power
+    iteration.
 
-Phase structure, wire accounting, conservation counters (`dropped` must
-stay 0), the exhaustion fallback to naive distributed walking, and the
-psum-reduced estimator pi = zeta * eps/(nK) are identical to
-`distributed_improved.py` — see that module for the superstep details.
-Statistical target: `improved_pagerank.directed_local_pagerank` (the
-single-device Section-5 engine) and power iteration on directed fixtures.
+This engine used to default to worst-case LOCAL buffers (every coupon /
+walk co-resident on one shard) because a directed hub can attract
+essentially the whole pool in one round and per-walk lanes under the
+CONGEST 2*W/P rule overflowed on power-law webs. Count aggregation
+(Lemma 1) retired the pool-sized buffers: Phases 1-3 move per-vertex
+counts whose lane volume is bounded by distinct vertices, never by walk
+multiplicity, so a hub attracting the entire pool still costs ONE lane
+entry and no per-coupon slot exists anywhere (the old cap1 was
+sum(pool) ~ n*eta*log n slots per shard). The one per-walk surface left
+is the naive exhaustion tail, and there a directed hub still has no
+degree bound tying its load to 2*W/P — so `cap2` alone keeps the
+worst-case W sizing (W = n*K walk slots, orders of magnitude below the
+retired pool buffers), which makes `dropped == 0` structural: lane
+backpressure shows up as `waited`, never as a drop.
+
+Phase structure, wire accounting, conservation counters, the exhaustion
+fallback to naive distributed walking, and the host-float64 estimator
+pi = zeta * eps/(nK) are identical to `distributed_improved.py` — see
+that module for the superstep details. Statistical target:
+`improved_pagerank.directed_local_pagerank` (the single-device Section-5
+engine) and power iteration on directed fixtures.
 """
 from __future__ import annotations
 
@@ -74,13 +87,11 @@ def distributed_directed_pagerank(
     lam: Optional[int] = None,
     eta: Optional[int] = None,
     eta_safety: float = 2.0,
-    cap1: Optional[int] = None,
     cap2: Optional[int] = None,
-    route_cap1: Optional[int] = None,
     route_cap2: Optional[int] = None,
-    rep_cap: Optional[int] = None,
     max_rounds: int = 100_000,
     bandwidth_bits: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
     checkpoint_dir: Optional[str] = None,
     fail_at: Optional[Sequence[int]] = None,
     checkpoint_every: int = 10,
@@ -90,9 +101,11 @@ def distributed_directed_pagerank(
     """Run the Section-5 directed/LOCAL algorithm across all devices of
     `mesh` (default: all devices).
 
-    `checkpoint_dir`/`fail_at`/`checkpoint_every`/`max_restarts`/`resume`
-    select the checkpoint-restart supervisor over the shared phase-machine
-    (see `distributed_improved._run_three_phase`): recovery is bit-exact."""
+    `cap2`/`route_cap2` size only the naive-tail buffers; the aggregated
+    phases size themselves. `checkpoint_dir`/`fail_at`/`checkpoint_every`/
+    `max_restarts`/`resume` select the checkpoint-restart supervisor over
+    the shared phase-machine (see `distributed_improved._run_three_phase`):
+    recovery is bit-exact."""
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), (AXIS,))
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -105,25 +118,16 @@ def distributed_directed_pagerank(
     eta, pool_np = coupon_pool_sizes(graph, eps, K, lam, eta=eta,
                                      eta_safety=eta_safety,
                                      degree_proportional=False, ell=ell)
-    # LOCAL-model buffer sizing: a directed hub can attract essentially the
-    # whole coupon pool (resp. every long walk) in one round — there is no
-    # Lemma-2 degree bound tying load to d(v), and the `distributed.py`
-    # 2*W/P rule that serves the CONGEST engines overflows (drops) on
-    # power-law webs. LOCAL charges unbounded per-round communication to
-    # capacity instead of rounds, so default to worst-case buffers: every
-    # coupon / walk co-resident on one shard.
-    shards = int(mesh.devices.size)
-    if cap1 is None:
-        cap1 = int(pool_np.sum()) + shards * 64
+    # the naive tail is per-walk: worst-case W buffer (see module docstring)
     if cap2 is None:
-        cap2 = n * K + shards * 64
+        cap2 = n * K + int(mesh.devices.size) * 64
     return _run_three_phase(
         graph, eps, K, key, mesh, pool_np=pool_np, eta=int(eta),
-        lam=int(lam), ell=int(ell), cap1=cap1, cap2=cap2,
-        route_cap1=route_cap1, route_cap2=route_cap2, rep_cap=rep_cap,
+        lam=int(lam), ell=int(ell), cap2=cap2, route_cap2=route_cap2,
         max_rounds=max_rounds, bandwidth_bits=bandwidth_bits,
-        checkpoint_dir=checkpoint_dir, fail_at=fail_at,
-        checkpoint_every=checkpoint_every, max_restarts=max_restarts,
-        resume=resume, result_cls=DirectedDistResult,
+        use_pallas=use_pallas, checkpoint_dir=checkpoint_dir,
+        fail_at=fail_at, checkpoint_every=checkpoint_every,
+        max_restarts=max_restarts, resume=resume,
+        result_cls=DirectedDistResult,
         uniform_budget=int(pool_np[0]),
         dangling_nodes=int((np.asarray(graph.out_deg) == 0).sum()))

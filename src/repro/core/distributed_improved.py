@@ -5,73 +5,94 @@ The single-device `improved_pagerank.py` holds the whole coupon pool and
 every trajectory in one address space; this engine is the CONGEST-faithful
 TPU-pod version: vertices are partitioned into contiguous shards (one per
 mesh device) and every exchange is a fixed-capacity `all_to_all` built from
-the shared lane machinery in `routing.py`. Payloads carry anonymous
-positions/counters, never walk identities (Lemma 1 discipline).
+the shared lane machinery in `routing.py`. Payloads are count-aggregated
+per Lemma 1: walks are anonymous, so everything that moves between shards
+travels as (vertex, count) pairs — the wire volume is bounded by the number
+of *distinct* (vertex, outcome) pairs, independent of how many walks move.
 
 Phase 1 — short-walk pre-computation. Shard p owns the coupons of its
   vertices: vertex v gets pool_size(v) = d(v)*eta coupons (Lemma 2 sizing,
   see `improved_pagerank.coupon_pool_sizes`), each a PageRank walk given
-  exactly lambda = ceil(sqrt(log n)) step opportunities (eps-reset or a
-  dangling vertex terminates it early). Coupon ids are `home * S_loc_pad +
-  local_index`, so a coupon's home shard is a single integer divide.
-  Walks move with route/step supersteps identical to the Algorithm 1
-  engine (`distributed.py`): cross-shard movers ride `route_cap`-bounded
-  lanes and *wait* when a lane is full. A closing report exchange routes
-  each coupon's (destination, length, terminated) summary back to its
-  home shard — the paper's "destinations report their ID" step.
+  exactly lambda = ceil(sqrt(log n)) step opportunities. Coupons never
+  migrate; slot s of shard p's pool table is its identity. Each round is
+  one count-aggregated round trip:
 
-Phase 2 — stitching. The n*K long walks live at the owner shard of their
-  current connector vertex. Each stitch superstep routes walks to their
-  connector's owner, then allocates each walk the next unused coupon of
-  that connector (sort-and-rank gives concurrent walks consecutive
-  offsets — natural-order consumption, distributionally identical to
-  uniform-without-replacement because coupons are iid). The walk jumps to
-  the coupon's recorded destination in O(1) rounds and keeps stitching
-  until a coupon's recorded eps-reset fires (a coupon is a fresh iid
-  short walk, so unlimited stitching samples the same distribution as
-  naive walking — no length cap needed for unbiasedness). A walk whose
-  connector pool is exhausted (eta undersized — the paper's whp bound
-  violated) falls back to naive distributed walking, tracked per round.
+    request — every home shard histograms its live coupons' current
+      vertices and ships per-vertex counts to the owners
+      (`route_counts(by_source=True)`, 8 B/entry);
+    sample  — the owner draws, independently for every (home, vertex)
+      row, a Binomial(c, eps) termination count (a dangling vertex
+      terminates the whole row) and splits the survivors over the
+      out-edges with a conditional-binomial multinomial — the aggregate
+      of c iid walk steps, never c individual steps;
+    reply   — nonzero (vertex, outcome-class, count) cells go back to the
+      home shard (12 B/entry); outcome class 0 is "terminated", class j
+      is "moved to out-edge j" carrying the destination vertex id;
+    assign  — the home shard assigns its coupons at vertex v to the
+      returned outcome slots by a uniformly-random permutation (random
+      priorities + stable rank within the vertex group). A multiset of
+      iid outcomes dealt out in uniform-random order IS an iid draw per
+      coupon, so every coupon still walks the exact eps-reset chain.
 
-Phase 3 — counting. Used-coupon visits are counted at owner shards by
-  *deterministic replay* of Phase 1 (same keys, same buffers, same lane
-  schedule => identical trajectories), with arrivals masked by the used
-  bitmap — the distributed analogue of the paper's reverse-trace; the
-  replay costs exactly phase1_rounds supersteps and is charged to Phase 3.
-  The used bitmap is broadcast once (its bytes are charged to Phase 3 wire
-  volume). Fallback/tail walks then finish naively through the Algorithm 1
-  superstep (`distributed._make_superstep`), counting arrivals into the
-  same sharded zeta; the estimator pi = zeta * eps/(nK) is reduced with a
-  final psum over the mesh axis.
+  The per-coupon move is recorded in a home-local trajectory table
+  `traj[slot, t]` — this is what Phase 3 counts, so no replay is needed.
 
-Static shapes throughout; buffer overflow is counted in `dropped` and must
-stay 0 for an exact run. Sizing rule, per phase with W resident walks:
-`cap >= max(2*W/P, W_loc_max) + P*64` with `route_cap >= W/P` (mirrors
-`distributed.py`; the `W_loc_max` term covers degree-skewed Phase 1
-starts).
+Phase 2 — stitching. The n*K long walks are anonymous too ("which coupon
+  did walk w use" is never needed — coupons are iid), so the engine keeps
+  only per-vertex walk *counts*. Each stitch superstep allocates, at every
+  owned vertex, the next `min(walks_here, pool_left)` unused coupons
+  (natural-order consumption — distributionally identical to
+  uniform-without-replacement because coupons are iid), marks them used,
+  retires walks whose coupon recorded an eps-reset, and ships the rest as
+  per-destination counts (`route_counts`, 8 B/entry). Walks at an
+  exhausted pool (eta undersized — the paper's whp bound violated)
+  accumulate in a per-vertex tail count for the naive fallback.
+
+Phase 3 — counting. One histogram of the used coupons' home-local
+  trajectories plus ONE `route_counts` exchange lands every visit at its
+  owner shard: the paper's "destinations report their ID" step collapses
+  to a single aggregated round (the old implementation re-ran the whole
+  Phase-1 schedule as a deterministic replay; the trajectory table makes
+  that — and its per-walk wire — unnecessary). Tail walks then finish
+  naively through the Algorithm 1 superstep (`distributed._make_superstep`),
+  counting arrivals into the same sharded zeta; the estimator
+  pi = zeta * eps/(nK) is computed on the host in float64
+  (`estimator.pagerank_from_visits`).
+
+Static shapes throughout; count lanes are sized so overflow is
+*structurally impossible* (`route_counts` caps lanes at n_loc distinct
+vertices; Phase-1 replies at min(n_loc*(max_deg+1), S_loc_pad) distinct
+cells), so `dropped` stays 0 by construction — only the naive tail keeps
+the Algorithm-1 `cap >= 2*W/P + P*route_cap` sizing rule.
 
 The phases only ever see a per-node pool-size vector, so the whole driver
 lives in the budget-policy-agnostic `_run_three_phase`; this module's
 public `distributed_improved_pagerank` feeds it Lemma-2 degree-proportional
 pools, and `distributed_directed.distributed_directed_pagerank` feeds it
-the Section-5 uniform/LOCAL pools.
+the Section-5 uniform/LOCAL pools — count aggregation removed the
+worst-case per-walk buffers that engine used to need.
+
+`use_pallas` routes the histograms, the count reductions, and the tail's
+walk advancement through the Pallas kernels in `repro.kernels`
+(bit-identical decision logic, interpret mode off-TPU); `None` defers to
+the REPRO_USE_PALLAS env var.
 
 Fault tolerance — the driver is a *checkpointable phase-machine*: each
-phase (phase1, report, phase2, phase3, tail) is a named `runtime.Stage`
-whose snapshot is the stage's device buffers (walk buffers, PRNG keys,
-coupon tables, the `used` bitmap) plus the host accumulators (wire/trace
+phase (phase1, phase2, phase3, tail) is a named `runtime.Stage` whose
+snapshot is the stage's device buffers (coupon tables, trajectory table,
+walk counts, the `used` bitmap) plus the host accumulators (wire/trace
 telemetry, round counters) as a pytree of arrays. With `checkpoint_dir`/
 `fail_at` set, the `runtime.Supervisor` drives the composed
 `StageSchedule`: a killed run resumes mid-phase from the latest
 stage-tagged snapshot and — because every stage is deterministic given its
-buffers and keys (Phase 3 *depends* on that determinism for replay) —
-produces bit-identical `zeta`/`pi` and telemetry vs an unfailed run.
+buffers and keys — produces bit-identical `zeta`/`pi` and telemetry vs an
+unfailed run.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
+from functools import lru_cache, partial
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -82,264 +103,254 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.accounting import CongestReport, RoundTrace, default_bandwidth
 from repro.core.distributed import (AXIS, DistState, _make_superstep,
                                     shard_graph, shard_map)
+from repro.core.distributed_counts import _multinomial_rows
+from repro.core.estimator import pagerank_from_visits
 from repro.core.graph import CSRGraph
 from repro.core.improved_pagerank import coupon_pool_sizes
-from repro.core.routing import (advance_owned, count_owned_arrivals,
-                                exchange_stacked, lane_slots, merge_walks,
-                                pack_lanes, rank_within, route_walks)
+from repro.core.routing import (entry_nbytes, exchange_stacked, lane_slots,
+                                pack_lanes, route_counts, vertex_histogram)
 from repro.core.simple_pagerank import walks_per_node_for
+from repro.kernels import resolve_use_pallas
 from repro.runtime import Stage, StagedState, StageSchedule, run_staged
 
+_INT32_MAX = 2 ** 31 - 1
+
 
 # ---------------------------------------------------------------------------
-# Phase 1: short-walk pre-computation (+ deterministic replay for Phase 3)
+# Phase 1: count-aggregated short-walk pre-computation
 # ---------------------------------------------------------------------------
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class ShortWalkState:
-    pos: jnp.ndarray     # [P, cap1] global vertex, -1 = empty slot
-    cid: jnp.ndarray     # [P, cap1] coupon id = home * S_loc_pad + local idx
-    steps: jnp.ndarray   # [P, cap1] step opportunities consumed (<= lam)
-    moves: jnp.ndarray   # [P, cap1] actual moves (the coupon's length)
-    alive: jnp.ndarray   # [P, cap1] 1 until the eps-reset / dangling stop
-    key: jnp.ndarray     # [P, 2] per-shard PRNG keys
-    zeta: jnp.ndarray    # [P, n_loc] visit counters (written only in replay)
-
-
-def _p1_local(rp, ci, dg, pos, cid, steps, moves, alive, key, zeta, used, *,
-              eps: float, lam: int, n_loc: int, shards: int, route_cap: int,
-              count: bool):
-    """One Phase-1 super-step on a single shard (route, then step).
-
-    With `count=True` (the Phase-3 replay) arrivals of coupons flagged in
-    the replicated `used` bitmap are added to zeta at the owner shard —
-    immediately for intra-shard moves, at receive time for routed ones.
-    """
-    rp, ci, dg, pos, cid, steps, moves, alive, key, zeta = (
-        rp[0], ci[0], dg[0], pos[0], cid[0], steps[0], moves[0], alive[0],
-        key[0], zeta[0])
+def _p1_local(rp, ci, dg, pos, alive, traj, key, t, *, eps: float,
+              n_loc: int, shards: int, md: int, rep_cap: int,
+              S_loc_pad: int, use_pallas: bool):
+    """One Phase-1 round on a single shard: request -> sample -> reply ->
+    assign (see module docstring). Coupons stay home-resident; `pos` is
+    slot s's current vertex, `traj[:, t]` records its move this round
+    (-1 = no move)."""
+    rp, ci, dg, pos, alive, traj, key = (
+        rp[0], ci[0], dg[0], pos[0], alive[0], traj[0], key[0])
     shard_id = jax.lax.axis_index(AXIS)
+    n_pad = shards * n_loc
+    C = S_loc_pad + 1
+    cells = n_loc * (md + 1)
+    key, k_term, k_split, k_perm = jax.random.split(key, 4)
+    elig = alive > 0
 
-    fields = dict(cid=cid, steps=steps, moves=moves, alive=alive)
-    kept_pos, kept_f, recv_pos, recv_f, waited, sent = route_walks(
-        pos, fields, axis=AXIS, shard_id=shard_id, n_loc=n_loc,
-        shards=shards, route_cap=route_cap)
-    arrived = recv_pos >= 0
-    if count:
-        u = used[jnp.clip(recv_f["cid"], 0, used.shape[0] - 1)] > 0
-        zeta = zeta + count_owned_arrivals(arrived & u, recv_pos, shard_id,
-                                           n_loc)
-    pos, f, dropped = merge_walks(kept_pos, kept_f, recv_pos, recv_f,
-                                  pos.shape[0])
-    cid, steps, moves, alive = f["cid"], f["steps"], f["moves"], f["alive"]
+    # ---- request: per-vertex live-coupon counts to the owners ----
+    req = vertex_histogram(pos, elig, n_pad, use_pallas=use_pallas)
+    c_by_home, req_entries, req_bytes = route_counts(
+        req, axis=AXIS, shard_id=shard_id, n_loc=n_loc, shards=shards,
+        by_source=True, use_pallas=use_pallas)
+    c = c_by_home.reshape(-1)               # [P*n_loc], row = home*n_loc + v
 
-    key, k_term, k_edge = jax.random.split(key, 3)
-    valid = pos >= 0
-    owned = valid & (pos // n_loc == shard_id)
-    eligible = owned & (alive > 0) & (steps < lam)
-    survive, dst = advance_owned(rp, ci, dg, pos, eligible, k_term, k_edge,
-                                 eps, shard_id, n_loc)
-    new_pos = jnp.where(survive, dst, pos)
-    steps = steps + eligible.astype(jnp.int32)
-    alive = jnp.where(eligible, survive.astype(jnp.int32), alive)
-    moves = moves + survive.astype(jnp.int32)
-    if count:
-        u = used[jnp.clip(cid, 0, used.shape[0] - 1)] > 0
-        local_arrival = survive & (dst // n_loc == shard_id)
-        zeta = zeta + count_owned_arrivals(local_arrival & u, dst, shard_id,
-                                           n_loc)
+    # ---- owner: aggregate-sample outcomes per (home, vertex) row ----
+    # Each row is sampled independently (Binomial terminations + a
+    # conditional-binomial multinomial over the out-edges): the aggregate
+    # of that row's c iid walk steps. Dangling rows terminate whole.
+    deg_row = jnp.tile(dg, shards)
+    term_draw = jax.random.binomial(
+        k_term, c.astype(jnp.float32), eps).astype(jnp.int32)
+    survivors = jnp.where(deg_row > 0, c - term_draw, 0)
+    T, _ = _multinomial_rows(k_split, survivors, deg_row, md)
+    cnt = jnp.concatenate([(c - survivors)[:, None], T], axis=1)
+    eidx = jnp.clip(rp[:n_loc, None] + jnp.arange(md)[None, :], 0,
+                    ci.shape[0] - 1)
+    edge_dst = ci[eidx]                     # [n_loc, md] global dst per edge
+    dst = jnp.concatenate(
+        [jnp.full((shards * n_loc, 1), -2, jnp.int32),   # class 0: reset
+         jnp.tile(edge_dst, (shards, 1))], axis=1)
+    vid = jnp.tile(shard_id * n_loc + jnp.arange(n_loc, dtype=jnp.int32),
+                   shards)
 
-    # work left: walks with step opportunities remaining, plus in-flight
-    # walks that still must be delivered to (and recorded at) their owner
-    owned2 = (new_pos >= 0) & (new_pos // n_loc == shard_id)
-    working = ((alive > 0) & (steps < lam)) | ((new_pos >= 0) & ~owned2)
-    pending = jax.lax.psum(jnp.sum(working), AXIS)
-    dropped = jax.lax.psum(dropped, AXIS)
-    waited = jax.lax.psum(waited, AXIS)
-    sent = jax.lax.psum(sent, AXIS)
-    return (new_pos[None], cid[None], steps[None], moves[None], alive[None],
-            key[None], zeta[None], pending, dropped, waited, sent)
+    # ---- reply: nonzero (vertex, class, count) cells to the home ----
+    f_vid = jnp.repeat(vid, md + 1)
+    f_cnt = cnt.reshape(-1)
+    f_dst = dst.reshape(-1)
+    home = jnp.arange(shards * cells, dtype=jnp.int32) // cells
+    remote = (f_cnt > 0) & (home != shard_id)
+    sendable, flat_idx = lane_slots(home, remote, shards, rep_cap)
+    l_vid = pack_lanes(flat_idx, f_vid, sendable, shards, rep_cap, fill=-1)
+    l_dst = pack_lanes(flat_idx, f_dst, sendable, shards, rep_cap, fill=0)
+    l_cnt = pack_lanes(flat_idx, f_cnt, sendable, shards, rep_cap, fill=0)
+    r_vid, r_dst, r_cnt = exchange_stacked([l_vid, l_dst, l_cnt], AXIS,
+                                           shards, rep_cap)
+    # rep_cap = min(n_loc*(md+1), S_loc_pad) bounds the distinct cells one
+    # home can receive, so this stays 0; psum'd into dropped as a tripwire
+    overflow = jnp.sum(remote & ~sendable)
+    rep_entries = jnp.sum(l_vid >= 0)
+    rep_bytes = rep_entries * entry_nbytes(l_vid, l_dst, l_cnt)
+
+    own_start = shard_id * cells            # own home's block, wire-free
+    o_vid = jax.lax.dynamic_slice(f_vid, (own_start,), (cells,))
+    o_dst = jax.lax.dynamic_slice(f_dst, (own_start,), (cells,))
+    o_cnt = jax.lax.dynamic_slice(f_cnt, (own_start,), (cells,))
+
+    # ---- home: segmented outcome intervals, keyed v*C + start-rank ----
+    e_vid = jnp.concatenate([o_vid, r_vid])
+    e_dst = jnp.concatenate([o_dst, r_dst])
+    e_cnt = jnp.concatenate([o_cnt, jnp.where(r_vid >= 0, r_cnt, 0)])
+    evid = jnp.where((e_cnt > 0) & (e_vid >= 0), e_vid, n_pad)
+    order = jnp.argsort(evid, stable=True)
+    evid_s, cnt_s, dst_s = evid[order], e_cnt[order], e_dst[order]
+    s = jnp.cumsum(cnt_s) - cnt_s           # exclusive cumsum (nonneg cnt)
+    idx = jnp.arange(evid_s.shape[0])
+    is_start = jnp.concatenate([jnp.ones((1,), bool),
+                                evid_s[1:] != evid_s[:-1]])
+    base = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, s, 0))
+    sw = (s - base).astype(jnp.int32)       # rank interval start within v
+    keys_s = jnp.where(evid_s < n_pad, evid_s * C + sw, _INT32_MAX)
+
+    # ---- assign: uniform-random permutation of coupons within vertex ----
+    u = jax.random.uniform(k_perm, (S_loc_pad,))
+    gkey = jnp.where(elig, pos, n_pad)
+    ord2 = jnp.lexsort((u, gkey))           # by vertex, random within
+    gs = gkey[ord2]
+    idx2 = jnp.arange(S_loc_pad)
+    is_st2 = jnp.concatenate([jnp.ones((1,), bool), gs[1:] != gs[:-1]])
+    rst = jax.lax.associative_scan(jnp.maximum,
+                                   jnp.where(is_st2, idx2, 0))
+    rank = jnp.zeros((S_loc_pad,), jnp.int32).at[ord2].set(
+        (idx2 - rst).astype(jnp.int32))
+    q = jnp.where(elig, pos * C + rank, 0)
+    loc = jnp.clip(jnp.searchsorted(keys_s, q, side="right") - 1, 0,
+                   keys_s.shape[0] - 1)
+    out = dst_s[loc]                        # -2 = reset, >=0 = destination
+    survive = elig & (out >= 0)
+    new_pos = jnp.where(survive, out, pos)  # dead coupons keep final vertex
+    new_alive = survive.astype(jnp.int32)
+    traj = jax.lax.dynamic_update_slice(
+        traj, jnp.where(survive, out, -1).astype(jnp.int32)[:, None],
+        (jnp.int32(0), t))
+
+    pending = jax.lax.psum(jnp.sum(survive), AXIS)
+    overflow = jax.lax.psum(overflow, AXIS)
+    entries = jax.lax.psum(req_entries + rep_entries, AXIS)
+    nbytes = jax.lax.psum(req_bytes + rep_bytes, AXIS)
+    return (new_pos[None], new_alive[None], traj[None], key[None],
+            pending, overflow, entries, nbytes)
 
 
-def _make_p1_step(mesh: Mesh, *, eps: float, lam: int, n_loc: int,
-                  shards: int, route_cap: int, count: bool):
-    fn = partial(_p1_local, eps=eps, lam=lam, n_loc=n_loc, shards=shards,
-                 route_cap=route_cap, count=count)
+# The step makers are memoized: a fresh jitted closure per engine call
+# would recompile every stage program on every invocation (seconds per
+# program on CPU), while equal (mesh, static-config) arguments produce
+# byte-identical programs. jax interns Mesh objects, so repeat calls over
+# the same devices hit the cache even when the caller rebuilds the mesh.
+@lru_cache(maxsize=64)
+def _make_p1_step(mesh: Mesh, *, eps: float, n_loc: int, shards: int,
+                  md: int, rep_cap: int, S_loc_pad: int, use_pallas: bool):
+    fn = partial(_p1_local, eps=eps, n_loc=n_loc, shards=shards, md=md,
+                 rep_cap=rep_cap, S_loc_pad=S_loc_pad,
+                 use_pallas=use_pallas)
     sharded = shard_map(
         fn, mesh,
-        in_specs=(P(AXIS),) * 10 + (P(),),
-        out_specs=(P(AXIS),) * 7 + (P(), P(), P(), P()))
+        in_specs=(P(AXIS),) * 7 + (P(),),
+        out_specs=(P(AXIS),) * 4 + (P(),) * 4)
 
     @jax.jit
-    def step(rp, ci, dg, st: ShortWalkState, used):
-        (pos, cid, steps, moves, alive, key, zeta,
-         pending, dropped, waited, sent) = sharded(
-            rp, ci, dg, st.pos, st.cid, st.steps, st.moves, st.alive,
-            st.key, st.zeta, used)
-        return (ShortWalkState(pos=pos, cid=cid, steps=steps, moves=moves,
-                               alive=alive, key=key, zeta=zeta),
-                pending, dropped, waited, sent)
+    def step(rp, ci, dg, pos, alive, traj, key, t):
+        return sharded(rp, ci, dg, pos, alive, traj, key, t)
 
     return step
 
 
 # ---------------------------------------------------------------------------
-# Phase 1 closing report: coupon summaries back to their home shards
+# Phase 2: count-aggregated coupon stitching
 # ---------------------------------------------------------------------------
 
-def _report_local(pos, cid, moves, alive, pending, dest, clen, cterm, *,
-                  shards: int, S_loc_pad: int, rep_cap: int):
-    """Route each finished coupon's (dest, length, terminated) summary to
-    its home shard; up to rep_cap per target per round, the rest wait."""
-    pos, cid, moves, alive, pending, dest, clen, cterm = (
-        pos[0], cid[0], moves[0], alive[0], pending[0], dest[0], clen[0],
-        cterm[0])
+def _p2_local(walks, next_c, used, tail_cnt, dest, cterm, psize, pstart,
+              slot_v, *, n_loc: int, shards: int, S_loc_pad: int,
+              use_pallas: bool):
+    """One stitch superstep. Long walks are anonymous, so the state is a
+    per-owned-vertex count: allocate the next unused coupons of each
+    vertex's pool to the walks waiting there (natural-order consumption —
+    distributionally identical to uniform-without-replacement because
+    coupons are iid), retire walks whose coupon recorded an eps-reset,
+    route the movers as per-destination counts, and bank pool-exhausted
+    walks in `tail_cnt` for the naive fallback."""
+    (walks, next_c, used, tail_cnt, dest, cterm, psize, pstart, slot_v) = (
+        walks[0], next_c[0], used[0], tail_cnt[0], dest[0], cterm[0],
+        psize[0], pstart[0], slot_v[0])
     shard_id = jax.lax.axis_index(AXIS)
-    is_p = pending > 0
-    home = jnp.where(is_p, cid // S_loc_pad, shards)
-    term = 1 - alive
+    n_pad = shards * n_loc
 
-    local_rep = is_p & (home == shard_id)
-    li = jnp.where(local_rep, cid % S_loc_pad, S_loc_pad)
-    dest = dest.at[li].set(jnp.where(local_rep, pos, 0), mode="drop")
-    clen = clen.at[li].set(jnp.where(local_rep, moves, 0), mode="drop")
-    cterm = cterm.at[li].set(jnp.where(local_rep, term, 0), mode="drop")
+    a = jnp.minimum(walks, psize - next_c)        # coupons allocatable now
+    exh = walks - a                               # pool empty: naive tail
+    off = jnp.arange(S_loc_pad, dtype=jnp.int32) - pstart[slot_v]
+    nc = next_c[slot_v]
+    alloc = (off >= nc) & (off < nc + a[slot_v])  # this round's used slots
+    used = jnp.maximum(used, alloc.astype(jnp.int32))
+    next_c = next_c + a
+    term_now = alloc & (cterm > 0)      # coupon's eps-reset fired: walk done
+    go = alloc & (cterm == 0)           # walk continues at coupon's dest
+    dcnt = vertex_histogram(dest, go, n_pad, use_pallas=use_pallas)
+    arrivals, sent_entries, sent_bytes = route_counts(
+        dcnt, axis=AXIS, shard_id=shard_id, n_loc=n_loc, shards=shards,
+        use_pallas=use_pallas)
+    tail_cnt = tail_cnt + exh
 
-    remote = is_p & (home != shard_id)
-    sendable, flat_idx = lane_slots(home, remote, shards, rep_cap)
-    l_cid = pack_lanes(flat_idx, cid, sendable, shards, rep_cap, fill=-1)
-    r_cid, r_pos, r_mov, r_trm = exchange_stacked(
-        [l_cid] + [pack_lanes(flat_idx, v, sendable, shards, rep_cap,
-                              fill=0) for v in (pos, moves, term)],
-        AXIS, shards, rep_cap)
-    got = r_cid >= 0
-    ri = jnp.where(got, r_cid % S_loc_pad, S_loc_pad)
-    dest = dest.at[ri].set(jnp.where(got, r_pos, 0), mode="drop")
-    clen = clen.at[ri].set(jnp.where(got, r_mov, 0), mode="drop")
-    cterm = cterm.at[ri].set(jnp.where(got, r_trm, 0), mode="drop")
-
-    new_pending = (is_p & ~local_rep & ~sendable).astype(jnp.int32)
-    left = jax.lax.psum(jnp.sum(new_pending), AXIS)
-    sent = jax.lax.psum(jnp.sum(l_cid >= 0), AXIS)
-    return (new_pending[None], dest[None], clen[None], cterm[None],
-            left, sent)
-
-
-def _make_report_step(mesh: Mesh, *, shards: int, S_loc_pad: int,
-                      rep_cap: int):
-    fn = partial(_report_local, shards=shards, S_loc_pad=S_loc_pad,
-                 rep_cap=rep_cap)
-    sharded = shard_map(fn, mesh,
-                        in_specs=(P(AXIS),) * 8,
-                        out_specs=(P(AXIS),) * 4 + (P(), P()))
-
-    @jax.jit
-    def step(pos, cid, moves, alive, pending, dest, clen, cterm):
-        return sharded(pos, cid, moves, alive, pending, dest, clen, cterm)
-
-    return step
-
-
-# ---------------------------------------------------------------------------
-# Phase 2: coupon stitching with static connector exchanges
-# ---------------------------------------------------------------------------
-
-def _p2_local(pos, lend, mode, next_c, used, psize, pstart, dest, clen,
-              cterm, *, n_loc: int, shards: int, route_cap: int,
-              S_loc_pad: int):
-    """One stitch super-step: route long walks to their connector's owner,
-    then allocate each a distinct next-unused coupon and jump to its
-    destination. `mode` 0 = stitching, 1 = fallback (naive tail).
-
-    Unlike the single-device engine (which stops stitching at ell - lam
-    and walks the tail naively), walks here stitch until their reset
-    fires: a coupon is a fresh iid short walk from the connector, so
-    unlimited stitching samples exactly the same distribution while
-    keeping every round a O(1)-stitch round — the naive fallback is
-    reserved for pool exhaustion. Expected coupons per walk is
-    1/(1-(1-eps)^lam) < 1/(eps*lam) + 1, so `coupon_pool_sizes` still
-    overprovisions."""
-    pos, lend, mode, next_c, used, psize, pstart, dest, clen, cterm = (
-        pos[0], lend[0], mode[0], next_c[0], used[0], psize[0], pstart[0],
-        dest[0], clen[0], cterm[0])
-    shard_id = jax.lax.axis_index(AXIS)
-
-    kept_pos, kept_f, recv_pos, recv_f, waited, sent = route_walks(
-        pos, dict(lend=lend, mode=mode), axis=AXIS, shard_id=shard_id,
-        n_loc=n_loc, shards=shards, route_cap=route_cap)
-    pos, f, dropped = merge_walks(kept_pos, kept_f, recv_pos, recv_f,
-                                  pos.shape[0])
-    lend, mode = f["lend"], f["mode"]
-
-    # ---- allocate: distinct next-unused coupon per co-located walk ----
-    valid = pos >= 0
-    owned = valid & (pos // n_loc == shard_id)
-    sa = owned & (mode == 0)                       # stitch-active
-    cur_local = pos - shard_id * n_loc
-    rank, _ = rank_within(jnp.where(sa, cur_local, n_loc))
-    cl = jnp.clip(jnp.where(sa, cur_local, 0), 0, n_loc - 1)
-    offset = next_c[cl] + rank
-    ok = sa & (offset < psize[cl])
-    cid_loc = jnp.clip(pstart[cl] + offset, 0, S_loc_pad - 1)
-    used = used.at[jnp.where(ok, cid_loc, S_loc_pad)].max(
-        jnp.ones_like(cid_loc), mode="drop")
-    # pool pointer advances by the number of *requests* (the paper deletes
-    # coupons on sampling); saturates at the pool size
-    req = jax.ops.segment_sum(sa.astype(jnp.int32),
-                              jnp.where(sa, cur_local, n_loc),
-                              num_segments=n_loc + 1)[:n_loc]
-    next_c = jnp.minimum(next_c + req, psize)
-
-    c_dest = dest[cid_loc]
-    c_len = clen[cid_loc]
-    c_trm = cterm[cid_loc]
-    term_now = ok & (c_trm > 0)          # coupon's eps-reset fired: walk done
-    lend = jnp.where(ok, lend + c_len, lend)
-    new_pos = jnp.where(term_now, -1, jnp.where(ok, c_dest, pos))
-    exhaust = sa & ~ok                             # pool empty: naive tail
-    mode = jnp.where(exhaust, 1, mode)
-
-    stitched = jax.lax.psum(jnp.sum(ok), AXIS)
+    stitched = jax.lax.psum(jnp.sum(a), AXIS)
     terminated = jax.lax.psum(jnp.sum(term_now), AXIS)
-    exhausted = jax.lax.psum(jnp.sum(exhaust), AXIS)
-    active = jax.lax.psum(jnp.sum((new_pos >= 0) & (mode == 0)), AXIS)
-    dropped = jax.lax.psum(dropped, AXIS)
-    waited = jax.lax.psum(waited, AXIS)
-    sent = jax.lax.psum(sent, AXIS)
-    return (new_pos[None], lend[None], mode[None], next_c[None], used[None],
-            active, stitched, terminated, exhausted, dropped, waited, sent)
+    exhausted = jax.lax.psum(jnp.sum(exh), AXIS)
+    active = jax.lax.psum(jnp.sum(arrivals), AXIS)
+    entries = jax.lax.psum(sent_entries, AXIS)
+    nbytes = jax.lax.psum(sent_bytes, AXIS)
+    return (arrivals[None], next_c[None], used[None], tail_cnt[None],
+            active, stitched, terminated, exhausted, entries, nbytes)
 
 
-def _make_p2_step(mesh: Mesh, *, n_loc: int, shards: int, route_cap: int,
-                  S_loc_pad: int):
-    fn = partial(_p2_local, n_loc=n_loc, shards=shards, route_cap=route_cap,
-                 S_loc_pad=S_loc_pad)
+@lru_cache(maxsize=64)
+def _make_p2_step(mesh: Mesh, *, n_loc: int, shards: int, S_loc_pad: int,
+                  use_pallas: bool):
+    fn = partial(_p2_local, n_loc=n_loc, shards=shards,
+                 S_loc_pad=S_loc_pad, use_pallas=use_pallas)
     sharded = shard_map(fn, mesh,
-                        in_specs=(P(AXIS),) * 10,
-                        out_specs=(P(AXIS),) * 5 + (P(),) * 7)
+                        in_specs=(P(AXIS),) * 9,
+                        out_specs=(P(AXIS),) * 4 + (P(),) * 6)
 
     @jax.jit
-    def step(pos, lend, mode, next_c, used, psize, pstart, dest, clen,
-             cterm):
-        return sharded(pos, lend, mode, next_c, used, psize, pstart, dest,
-                       clen, cterm)
+    def step(walks, next_c, used, tail_cnt, dest, cterm, psize, pstart,
+             slot_v):
+        return sharded(walks, next_c, used, tail_cnt, dest, cterm, psize,
+                       pstart, slot_v)
 
     return step
 
 
 # ---------------------------------------------------------------------------
-# estimator reduction
+# Phase 3: one aggregated counting round over the trajectory table
 # ---------------------------------------------------------------------------
 
-def _make_finalize(mesh: Mesh, scale: float):
-    def fin(zeta):
-        z = zeta[0]
-        total = jax.lax.psum(jnp.sum(z), AXIS)
-        return (z.astype(jnp.float32) * scale)[None], total
+def _p3_local(traj, used, zeta, *, n_loc: int, shards: int,
+              use_pallas: bool):
+    """Histogram the used coupons' recorded moves and deliver the counts
+    to the owner shards in ONE `route_counts` exchange."""
+    traj, used, zeta = traj[0], used[0], zeta[0]
+    shard_id = jax.lax.axis_index(AXIS)
+    n_pad = shards * n_loc
+    ids = jnp.where(used[:, None] > 0, traj, -1).reshape(-1)
+    part = vertex_histogram(ids, ids >= 0, n_pad, use_pallas=use_pallas)
+    arrivals, sent_entries, sent_bytes = route_counts(
+        part, axis=AXIS, shard_id=shard_id, n_loc=n_loc, shards=shards,
+        use_pallas=use_pallas)
+    zeta = zeta + arrivals
+    entries = jax.lax.psum(sent_entries, AXIS)
+    nbytes = jax.lax.psum(sent_bytes, AXIS)
+    return zeta[None], entries, nbytes
 
-    return jax.jit(shard_map(fin, mesh, in_specs=(P(AXIS),),
-                             out_specs=(P(AXIS), P())))
+
+@lru_cache(maxsize=64)
+def _make_p3_step(mesh: Mesh, *, n_loc: int, shards: int,
+                  use_pallas: bool):
+    fn = partial(_p3_local, n_loc=n_loc, shards=shards,
+                 use_pallas=use_pallas)
+    sharded = shard_map(fn, mesh, in_specs=(P(AXIS),) * 3,
+                        out_specs=(P(AXIS), P(), P()))
+
+    @jax.jit
+    def step(traj, used, zeta):
+        return sharded(traj, used, zeta)
+
+    return step
 
 
 # ---------------------------------------------------------------------------
@@ -376,9 +387,10 @@ class ImprovedDistResult:
     ell: int
     rounds: int                  # total supersteps across all phases
     phase1_rounds: int
-    report_rounds: int
+    report_rounds: int           # 0: the report phase is gone — coupons
+                                 # stay home, so (dest, term) is local
     phase2_rounds: int           # stitch supersteps
-    phase3_rounds: int           # replay supersteps (== phase1_rounds)
+    phase3_rounds: int           # aggregated counting exchanges (== 1)
     tail_rounds: int             # naive-fallback supersteps
     stitch_iterations: int
     exhausted_walks: int
@@ -408,13 +420,11 @@ def distributed_improved_pagerank(
     lam: Optional[int] = None,
     eta: Optional[int] = None,
     eta_safety: float = 2.0,
-    cap1: Optional[int] = None,
     cap2: Optional[int] = None,
-    route_cap1: Optional[int] = None,
     route_cap2: Optional[int] = None,
-    rep_cap: Optional[int] = None,
     max_rounds: int = 100_000,
     bandwidth_bits: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
     checkpoint_dir: Optional[str] = None,
     fail_at: Optional[Sequence[int]] = None,
     checkpoint_every: int = 10,
@@ -423,8 +433,10 @@ def distributed_improved_pagerank(
 ) -> ImprovedDistResult:
     """Run Algorithm 2 across all devices of `mesh` (default: all devices).
 
-    With `checkpoint_dir` and/or `fail_at` set, the phase-machine runs
-    under the checkpoint-restart supervisor (see `_run_three_phase`)."""
+    `cap2`/`route_cap2` size only the naive-tail buffers (Phases 1-3 are
+    count-aggregated and size themselves). With `checkpoint_dir` and/or
+    `fail_at` set, the phase-machine runs under the checkpoint-restart
+    supervisor (see `_run_three_phase`)."""
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), (AXIS,))
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -438,12 +450,11 @@ def distributed_improved_pagerank(
                                      eta_safety=eta_safety)
     return _run_three_phase(
         graph, eps, K, key, mesh, pool_np=pool_np, eta=int(eta),
-        lam=int(lam), ell=int(ell), cap1=cap1, cap2=cap2,
-        route_cap1=route_cap1, route_cap2=route_cap2, rep_cap=rep_cap,
+        lam=int(lam), ell=int(ell), cap2=cap2, route_cap2=route_cap2,
         max_rounds=max_rounds, bandwidth_bits=bandwidth_bits,
-        checkpoint_dir=checkpoint_dir, fail_at=fail_at,
-        checkpoint_every=checkpoint_every, max_restarts=max_restarts,
-        resume=resume)
+        use_pallas=use_pallas, checkpoint_dir=checkpoint_dir,
+        fail_at=fail_at, checkpoint_every=checkpoint_every,
+        max_restarts=max_restarts, resume=resume)
 
 
 def _run_three_phase(
@@ -457,13 +468,11 @@ def _run_three_phase(
     eta: int,
     lam: int,
     ell: int,
-    cap1: Optional[int] = None,
     cap2: Optional[int] = None,
-    route_cap1: Optional[int] = None,
     route_cap2: Optional[int] = None,
-    rep_cap: Optional[int] = None,
     max_rounds: int = 100_000,
     bandwidth_bits: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
     checkpoint_dir: Optional[str] = None,
     fail_at: Optional[Sequence[int]] = None,
     checkpoint_every: int = 10,
@@ -475,14 +484,15 @@ def _run_three_phase(
     """Budget-policy-agnostic 3-phase stitching driver, structured as a
     checkpointable phase-machine.
 
-    The whole engine — Phase-1 short walks, the closing report exchange,
-    Phase-2 stitching, Phase-3 replay counting, the naive tail, and the
-    psum-reduced estimator — only ever sees the per-node pool-size vector
-    `pool_np`, never the policy that produced it. `distributed_improved_
-    pagerank` (Lemma 2, d(v)*eta) and `distributed_directed.distributed_
-    directed_pagerank` (Section 5, uniform budgets in the LOCAL model) are
-    thin frontends over this core. `result_cls`/`extra_fields` let a
-    frontend return a telemetry subclass of ImprovedDistResult.
+    The whole engine — Phase-1 count-aggregated short walks, Phase-2
+    count-aggregated stitching, the Phase-3 one-shot counting exchange,
+    the naive tail, and the host-float64 estimator — only ever sees the
+    per-node pool-size vector `pool_np`, never the policy that produced
+    it. `distributed_improved_pagerank` (Lemma 2, d(v)*eta) and
+    `distributed_directed.distributed_directed_pagerank` (Section 5,
+    uniform budgets in the LOCAL model) are thin frontends over this core.
+    `result_cls`/`extra_fields` let a frontend return a telemetry subclass
+    of ImprovedDistResult.
 
     Each phase is a `runtime.Stage` over a `StagedState` whose `arrays`
     hold the phase's device buffers and whose `host` dict holds the
@@ -499,6 +509,7 @@ def _run_three_phase(
     """
     shards = int(mesh.devices.size)
     n = graph.n
+    use_pallas = resolve_use_pallas(use_pallas)
 
     sg = shard_graph(graph, shards)
     n_loc = sg.n_loc
@@ -506,6 +517,7 @@ def _run_three_phase(
     sg_rp = jax.device_put(sg.row_ptr, spec)
     sg_ci = jax.device_put(sg.col_idx, spec)
     sg_dg = jax.device_put(sg.out_deg, spec)
+    md = max(int(np.asarray(sg.out_deg).max()), 1)
 
     # ---- coupon pool layout: contiguous per shard, padded to S_loc_pad ----
     pool_pad = np.zeros(sg.n_pad, dtype=np.int64)
@@ -518,202 +530,154 @@ def _run_three_phase(
     S_total = int(pool_np.sum())
     if shards * S_loc_pad >= 2 ** 31:
         raise ValueError("coupon pool too large for int32 ids")
+    if (shards * n_loc + 1) * (S_loc_pad + 1) >= 2 ** 31:
+        raise ValueError("vertex*rank outcome keys overflow int32")
 
-    # lane caps resolve (and assert) the route_cap >= W/P rule in ONE place
-    route_cap1 = _lane_cap(route_cap1, S_total, shards)
+    # Phase-1 reply lanes: a home can receive at most one cell per
+    # (owned-vertex, outcome-class) pair and at most one per coupon
+    rep_cap = min(n_loc * (md + 1), S_loc_pad)
+    # tail (naive fallback) keeps the Algorithm-1 CONGEST sizing rule
     route_cap2 = _lane_cap(route_cap2, n * K, shards)
-    rep_cap = _lane_cap(rep_cap, S_loc_pad, shards)
-    if cap1 is None:
-        cap1 = max(2 * S_total // shards, S_loc_pad) + shards * 64
     if cap2 is None:
         cap2 = max(2 * n * K // shards, n_loc * K) + shards * 64
 
-    # ---- Phase-1 initial placement: each coupon at its source vertex ----
-    pos0 = np.full((shards, cap1), -1, dtype=np.int32)
-    cid0 = np.zeros((shards, cap1), dtype=np.int32)
+    # ---- Phase-1 placement: slot s of shard p = p's s-th coupon, at its
+    # source vertex; slots beyond S_loc[p] are padding (never allocated) --
+    pos0 = np.full((shards, S_loc_pad), -1, dtype=np.int32)
+    slot_v_np = np.zeros((shards, S_loc_pad), dtype=np.int32)
     for p in range(shards):
         owned = pool_pad[p * n_loc:(p + 1) * n_loc]
         src = np.repeat(np.arange(p * n_loc, (p + 1) * n_loc,
                                   dtype=np.int32), owned)
-        assert len(src) <= cap1, "cap1 too small for initial placement"
         pos0[p, : len(src)] = src
-        cid0[p, : len(src)] = p * S_loc_pad + np.arange(len(src),
-                                                        dtype=np.int32)
-    # ---- Phase-2 initial placement: K long walks per real vertex ----
-    pos2_np = np.full((shards, cap2), -1, dtype=np.int32)
+        slot_v_np[p, : len(src)] = src - p * n_loc
+    # ---- Phase-2 placement: K long walks per real vertex (counts) ----
+    walks0_np = np.zeros((shards, n_loc), dtype=np.int32)
+    zeta3_np = np.zeros((shards, n_loc), np.int32)
     for p in range(shards):
         lo = min(p * n_loc, n)
         hi = min((p + 1) * n_loc, n)
-        locs = np.repeat(np.arange(lo, hi, dtype=np.int32), K)
-        assert len(locs) <= cap2, "cap2 too small for initial placement"
-        pos2_np[p, : len(locs)] = locs
-    zeta3_np = np.zeros((shards, n_loc), np.int32)
-    zeta3_np.reshape(-1)[:n] = K                 # start visits of long walks
+        walks0_np[p, : hi - lo] = K
+        zeta3_np[p, : hi - lo] = K           # start visits of long walks
 
     key, k1, k_tail = jax.random.split(key, 3)
     k1_shards = jax.random.split(k1, shards)
-    zeros1 = np.zeros((shards, cap1), dtype=np.int32)
-
-    def fresh_p1_state(zeta0: np.ndarray) -> ShortWalkState:
-        return ShortWalkState(
-            pos=jax.device_put(jnp.asarray(pos0), spec),
-            cid=jax.device_put(jnp.asarray(cid0), spec),
-            steps=jax.device_put(jnp.asarray(zeros1), spec),
-            moves=jax.device_put(jnp.asarray(zeros1), spec),
-            alive=jax.device_put(jnp.asarray((pos0 >= 0).astype(np.int32)),
-                                 spec),
-            key=jax.device_put(k1_shards, spec),
-            zeta=jax.device_put(jnp.asarray(zeta0), spec))
 
     # ---- jitted per-phase step functions (shared by fresh + resumed) ----
-    p1_step = _make_p1_step(mesh, eps=float(eps), lam=int(lam), n_loc=n_loc,
-                            shards=shards, route_cap=int(route_cap1),
-                            count=False)
-    rep_step = _make_report_step(mesh, shards=shards, S_loc_pad=S_loc_pad,
-                                 rep_cap=int(rep_cap))
+    p1_step = _make_p1_step(mesh, eps=float(eps), n_loc=n_loc,
+                            shards=shards, md=md, rep_cap=rep_cap,
+                            S_loc_pad=S_loc_pad, use_pallas=use_pallas)
     p2_step = _make_p2_step(mesh, n_loc=n_loc, shards=shards,
-                            route_cap=int(route_cap2), S_loc_pad=S_loc_pad)
-    p3_step = _make_p1_step(mesh, eps=float(eps), lam=int(lam), n_loc=n_loc,
-                            shards=shards, route_cap=int(route_cap1),
-                            count=True)
+                            S_loc_pad=S_loc_pad, use_pallas=use_pallas)
+    p3_step = _make_p3_step(mesh, n_loc=n_loc, shards=shards,
+                            use_pallas=use_pallas)
     tail_step = _make_superstep(mesh, float(eps), n_loc, shards,
-                                int(route_cap2), 0)
+                                int(route_cap2), 0, use_pallas=use_pallas)
     psize_j = jax.device_put(jnp.asarray(psize_sh, dtype=jnp.int32), spec)
     pstart_j = jax.device_put(jnp.asarray(pstart_sh, dtype=jnp.int32), spec)
-    no_used = jnp.zeros((1,), jnp.int32)
-
-    _P1_FIELDS = ("pos", "cid", "steps", "moves", "alive", "key", "zeta")
+    slot_v_j = jax.device_put(jnp.asarray(slot_v_np), spec)
 
     # ---------------- stage step functions + host transitions ----------
     # Telemetry lives in the JSON-able `host` dict so a restored snapshot
     # rolls the accumulators back in lockstep with the device buffers.
 
     def _phase1(ms: StagedState):
-        st = ShortWalkState(**{f: ms.arrays[f] for f in _P1_FIELDS})
-        st, pending, dropped, waited, sent = p1_step(sg_rp, sg_ci, sg_dg,
-                                                     st, no_used)
-        ms.arrays.update({f: getattr(st, f) for f in _P1_FIELDS})
+        a = ms.arrays
+        t = jnp.int32(ms.host["phase1_rounds"])
+        pos, alive, traj, key1, pending, overflow, entries, nbytes = \
+            p1_step(sg_rp, sg_ci, sg_dg, a["pos"], a["alive"], a["traj"],
+                    a["key"], t)
+        a.update(pos=pos, alive=alive, traj=traj, key=key1)
+        # one device sync for all four telemetry scalars, not four
+        pending, overflow, entries, nbytes = (
+            int(x) for x in
+            jax.device_get((pending, overflow, entries, nbytes)))
         h = ms.host
         h["phase1_rounds"] += 1
-        h["dropped"] += int(dropped)
-        h["waited"] += int(waited)
-        entries = int(sent)
-        h["wire"]["phase1"] += entries * 20      # pos+cid+steps+moves+alive
-        h["traces"].append([int(pending), entries])
-        if int(pending) == 0:
-            return ms, True
-        if h["phase1_rounds"] >= max_rounds:
-            raise RuntimeError("phase 1 did not converge within max_rounds")
-        return ms, False
+        h["dropped"] += overflow
+        h["wire"]["phase1"] += nbytes
+        h["traces"].append([pending, entries])
+        # each coupon gets exactly lam step opportunities, one per round
+        return ms, pending == 0 or h["phase1_rounds"] >= lam
 
     def _after_phase1(ms: StagedState) -> StagedState:
+        # Coupons never moved buffers, so their summaries are already
+        # home-local: dest = final vertex, cterm = the reset fired.
+        # The trajectory table rides along untouched for Phase 3.
         a = ms.arrays
-        zero_pool = jax.device_put(
-            jnp.zeros((shards, S_loc_pad), jnp.int32), spec)
-        # every live buffer slot holds one (possibly migrated) coupon;
-        # empty slots must not report — their cid is stale after compaction
-        ms.arrays = dict(pos=a["pos"], cid=a["cid"], moves=a["moves"],
-                         alive=a["alive"],
-                         pending=(a["pos"] >= 0).astype(jnp.int32),
-                         dest=zero_pool, clen=zero_pool, cterm=zero_pool)
-        return ms
-
-    def _report(ms: StagedState):
-        a = ms.arrays
-        pending, dest, clen, cterm, left, sent = rep_step(
-            a["pos"], a["cid"], a["moves"], a["alive"], a["pending"],
-            a["dest"], a["clen"], a["cterm"])
-        a.update(pending=pending, dest=dest, clen=clen, cterm=cterm)
-        h = ms.host
-        h["report_rounds"] += 1
-        entries = int(sent)
-        h["wire"]["report"] += entries * 16      # cid+dest+len+term
-        h["traces"].append([int(left), entries])
-        if int(left) == 0:
-            return ms, True
-        if h["report_rounds"] >= max_rounds:
-            raise RuntimeError("phase-1 report did not converge")
-        return ms, False
-
-    def _after_report(ms: StagedState) -> StagedState:
-        a = ms.arrays
-        zeros2 = jnp.zeros((shards, cap2), jnp.int32)
         ms.arrays = dict(
-            pos2=jax.device_put(jnp.asarray(pos2_np), spec),
-            lend=jax.device_put(zeros2, spec),
-            mode=jax.device_put(zeros2, spec),
+            walks=jax.device_put(jnp.asarray(walks0_np), spec),
             next_c=jax.device_put(jnp.zeros((shards, n_loc), jnp.int32),
                                   spec),
             used=jax.device_put(jnp.zeros((shards, S_loc_pad), jnp.int32),
                                 spec),
-            dest=a["dest"], clen=a["clen"], cterm=a["cterm"])
+            tail_cnt=jax.device_put(jnp.zeros((shards, n_loc), jnp.int32),
+                                    spec),
+            dest=a["pos"], cterm=1 - a["alive"], traj=a["traj"],
+            zeta=jax.device_put(jnp.asarray(zeta3_np), spec))
         return ms
 
     def _phase2(ms: StagedState):
         a = ms.arrays
-        (pos2, lend, mode, next_c, used, active, stitched, terminated,
-         exhausted, dropped, waited, sent) = p2_step(
-            a["pos2"], a["lend"], a["mode"], a["next_c"], a["used"],
-            psize_j, pstart_j, a["dest"], a["clen"], a["cterm"])
-        a.update(pos2=pos2, lend=lend, mode=mode, next_c=next_c, used=used)
+        (walks, next_c, used, tail_cnt, active, stitched, terminated,
+         exhausted, entries, nbytes) = p2_step(
+            a["walks"], a["next_c"], a["used"], a["tail_cnt"], a["dest"],
+            a["cterm"], psize_j, pstart_j, slot_v_j)
+        a.update(walks=walks, next_c=next_c, used=used, tail_cnt=tail_cnt)
+        # one device sync for all six telemetry scalars, not six
+        active, stitched, terminated, exhausted, entries, nbytes = (
+            int(x) for x in jax.device_get(
+                (active, stitched, terminated, exhausted, entries, nbytes)))
         h = ms.host
         h["phase2_rounds"] += 1
-        h["stitches"] += int(stitched)
-        h["terminated"] += int(terminated)
-        h["exhausted"] += int(exhausted)
-        h["dropped"] += int(dropped)
-        h["waited"] += int(waited)
-        entries = int(sent)
-        h["wire"]["phase2"] += entries * 12      # pos+len+mode
+        h["stitches"] += stitched
+        h["terminated"] += terminated
+        h["exhausted"] += exhausted
+        h["wire"]["phase2"] += nbytes
         h["phase2_records"].append(dict(
-            active=int(active), stitched=int(stitched),
-            terminated=int(terminated), exhausted=int(exhausted)))
-        h["traces"].append([int(active), entries])
-        if int(active) == 0:
+            active=active, stitched=stitched,
+            terminated=terminated, exhausted=exhausted))
+        h["traces"].append([active, entries])
+        if active == 0:
             return ms, True
         if h["phase2_rounds"] >= max_rounds:
             raise RuntimeError("phase 2 did not converge within max_rounds")
         return ms, False
 
     def _after_phase2(ms: StagedState) -> StagedState:
-        # One broadcast of the used bitmap (charged to Phase-3 wire
-        # volume), then a deterministic re-run of the Phase-1 schedule
-        # with counting on.
         a = ms.arrays
-        h = ms.host
-        used_np = np.asarray(a["used"])
-        h["coupons_used"] = int(used_np.sum())
-        h["wire"]["phase3"] += shards * S_loc_pad * 4
-        st3 = fresh_p1_state(zeta3_np)
-        ms.arrays = {f: getattr(st3, f) for f in _P1_FIELDS}
-        ms.arrays["used_full"] = jnp.asarray(used_np.reshape(-1))
-        # pos2/mode ride along untouched: the tail placement needs them
-        ms.arrays["pos2"] = a["pos2"]
-        ms.arrays["mode"] = a["mode"]
+        ms.host["coupons_used"] = int(np.asarray(a["used"]).sum())
+        ms.arrays = dict(traj=a["traj"], used=a["used"], zeta=a["zeta"],
+                         tail_cnt=a["tail_cnt"])
         return ms
 
     def _phase3(ms: StagedState):
-        st = ShortWalkState(**{f: ms.arrays[f] for f in _P1_FIELDS})
-        st, pending3, _, _, sent = p3_step(sg_rp, sg_ci, sg_dg, st,
-                                           ms.arrays["used_full"])
-        ms.arrays.update({f: getattr(st, f) for f in _P1_FIELDS})
+        a = ms.arrays
+        zeta, entries, nbytes = p3_step(a["traj"], a["used"], a["zeta"])
+        a["zeta"] = zeta
+        entries, nbytes = (int(x) for x in
+                           jax.device_get((entries, nbytes)))
         h = ms.host
         h["phase3_rounds"] += 1
-        entries = int(sent)
-        h["wire"]["phase3"] += entries * 20
-        h["traces"].append([int(pending3), entries])
-        # the replay costs exactly phase1_rounds supersteps, by schedule
-        return ms, h["phase3_rounds"] >= h["phase1_rounds"]
+        h["wire"]["phase3"] += nbytes
+        h["traces"].append([0, entries])
+        return ms, True          # the whole count lands in ONE exchange
 
     def _after_phase3(ms: StagedState) -> StagedState:
         a = ms.arrays
         h = ms.host
-        pos_tail = jnp.where((a["mode"] == 1) & (a["pos2"] >= 0),
-                             a["pos2"], -1)
-        h["tail_walks"] = int(jnp.sum(pos_tail >= 0))
+        tail_np = np.asarray(a["tail_cnt"])
+        pos_tail = np.full((shards, cap2), -1, dtype=np.int32)
+        for p in range(shards):
+            vids = np.repeat(
+                np.arange(p * n_loc, (p + 1) * n_loc, dtype=np.int32),
+                tail_np[p])
+            assert len(vids) <= cap2, "cap2 too small for tail placement"
+            pos_tail[p, : len(vids)] = vids
+        h["tail_walks"] = int(tail_np.sum())
         h["tail_active"] = h["tail_walks"]
         ms.arrays = dict(
-            pos=jax.device_put(pos_tail, spec),
+            pos=jax.device_put(jnp.asarray(pos_tail), spec),
             zeta=a["zeta"],
             key=jax.device_put(jax.random.split(k_tail, shards), spec),
             round=jnp.int32(0), dropped=jnp.int32(0), waited=jnp.int32(0))
@@ -733,10 +697,11 @@ def _run_three_phase(
             a.update(pos=tstate.pos, zeta=tstate.zeta, key=tstate.key,
                      round=tstate.round, dropped=tstate.dropped,
                      waited=tstate.waited)
+            active, a2a = (int(x) for x in jax.device_get((active, a2a)))
             h["tail_rounds"] += 1
-            h["wire"]["tail"] += int(a2a)
-            h["traces"].append([int(active), int(a2a) // 4])
-            h["tail_active"] = int(active)
+            h["wire"]["tail"] += a2a
+            h["traces"].append([active, a2a // 4])
+            h["tail_active"] = active
         if h["tail_active"]:
             return ms, False
         h["dropped"] += int(a["dropped"])
@@ -745,16 +710,20 @@ def _run_three_phase(
 
     schedule = StageSchedule([
         Stage("phase1", _phase1, on_done=_after_phase1),
-        Stage("report", _report, on_done=_after_report),
         Stage("phase2", _phase2, on_done=_after_phase2),
         Stage("phase3", _phase3, on_done=_after_phase3),
         Stage("tail", _tail),
     ])
 
-    st0 = fresh_p1_state(np.zeros((shards, n_loc), np.int32))
+    traj0 = np.full((shards, S_loc_pad, lam), -1, dtype=np.int32)
     ms = StagedState(
         stage=schedule.first_stage,
-        arrays={f: getattr(st0, f) for f in _P1_FIELDS},
+        arrays=dict(
+            pos=jax.device_put(jnp.asarray(pos0), spec),
+            alive=jax.device_put(jnp.asarray((pos0 >= 0).astype(np.int32)),
+                                 spec),
+            traj=jax.device_put(jnp.asarray(traj0), spec),
+            key=jax.device_put(k1_shards, spec)),
         host=dict(phase1_rounds=0, report_rounds=0, phase2_rounds=0,
                   phase3_rounds=0, tail_rounds=0, dropped=0, waited=0,
                   stitches=0, terminated=0, exhausted=0, coupons_used=0,
@@ -766,23 +735,23 @@ def _run_three_phase(
     _scalar_keys = ("round", "dropped", "waited")
 
     def _put(name: str, arr: np.ndarray):
-        if name in _scalar_keys or name == "used_full":
-            return jnp.asarray(arr)              # replicated scalars/bitmap
+        if name in _scalar_keys:
+            return jnp.asarray(arr)              # replicated scalars
         return jax.device_put(jnp.asarray(arr), spec)
 
-    # global rounds sum over the five stages, each bounded by max_rounds
+    # global rounds sum over the four stages, each bounded by max_rounds
     # (the per-stage guards raise on divergence)
     ms, restarts, checkpoints_written = run_staged(
         schedule, ms, _put, checkpoint_dir=checkpoint_dir, fail_at=fail_at,
         checkpoint_every=checkpoint_every, max_restarts=max_restarts,
-        resume=resume, max_rounds=5 * max_rounds + len(schedule.stages),
+        resume=resume,
+        max_rounds=len(schedule.stages) * max_rounds + len(schedule.stages),
         tmp_prefix="pr3p_ckpt_")
 
-    # ---------------- estimator: psum-reduced across the mesh ----------
-    finalize = _make_finalize(mesh, float(eps) / (n * K))
-    pi_sh, total_visits = finalize(ms.arrays["zeta"])
+    # ---------------- estimator: host float64 scaling ------------------
     zeta = ms.arrays["zeta"].reshape(-1)[:n]
-    pi = pi_sh.reshape(-1)[:n]
+    pi = pagerank_from_visits(zeta, n, K, eps)
+    total_visits = int(np.asarray(zeta, dtype=np.int64).sum())
 
     h = ms.host
     wire = h["wire"]
@@ -805,5 +774,5 @@ def _run_three_phase(
         dropped=h["dropped"], waited=h["waited"],
         a2a_bytes_total=sum(wire.values()), a2a_bytes_by_phase=wire,
         phase2_records=h["phase2_records"], report=report,
-        total_visits=int(total_visits), restarts=restarts,
+        total_visits=total_visits, restarts=restarts,
         checkpoints_written=checkpoints_written, **extra_fields)

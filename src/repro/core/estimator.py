@@ -5,9 +5,16 @@ import numpy as np
 import jax.numpy as jnp
 
 
-def pagerank_from_visits(zeta: jnp.ndarray, n: int, walks_per_node: int, eps: float) -> jnp.ndarray:
-    """pi_tilde_v = zeta_v * eps / (n * K)   (Algorithm 1, step 12)."""
-    return zeta.astype(jnp.float32) * (eps / (n * walks_per_node))
+def pagerank_from_visits(zeta, n: int, walks_per_node: int,
+                         eps: float) -> np.ndarray:
+    """pi_tilde_v = zeta_v * eps / (n * K)   (Algorithm 1, step 12).
+
+    Scales on the host in float64: the integer visit counters exceed
+    float32's 2**24 integer-exact range once n * walks_per_node / eps gets
+    large, so a float32 cast would corrupt zeta *before* the scale. JAX
+    x64 is globally off in this repo, hence numpy rather than jnp here."""
+    zeta64 = np.asarray(zeta).astype(np.float64)
+    return zeta64 * (eps / (float(n) * float(walks_per_node)))
 
 
 def normalized(pi: jnp.ndarray) -> jnp.ndarray:

@@ -18,9 +18,23 @@ static-shape discipline:
 This module owns that machinery so the engines share one implementation:
 `rank_within` (stable in-group ranks), `pack_lanes`/`exchange` (lane
 scatter + all_to_all), `route_walks`/`merge_walks` (full route superstep for
-walk buffers with arbitrary payload fields riding along), `advance_owned`
-(one eps-reset/uniform-out-edge PageRank step for owned walks) and
-`count_owned_arrivals` (owner-side visit accounting).
+walk buffers with arbitrary payload fields riding along), `route_counts`
+(the Lemma-1 count-aggregated exchange: per-destination-vertex counts as
+(vertex, count) lanes, payload independent of how many walks move),
+`advance_owned` (one eps-reset/uniform-out-edge PageRank step for owned
+walks) and `count_owned_arrivals` (owner-side visit accounting).
+
+Wire accounting: `entry_nbytes` is the single source of truth for
+bytes-per-lane-entry — it is derived from the dtypes of the arrays actually
+exchanged, and the routing helpers return `sent_bytes` computed with it, so
+an engine's wire telemetry cannot drift from its payload when a column is
+added or dropped.
+
+`advance_owned` and `count_owned_arrivals` accept `use_pallas` to run the
+per-walk advancement / histogram through the Pallas kernels in
+`repro.kernels` (`walk_step`, `histogram`); the kernels are bit-identical
+to the jnp paths (same uniforms, same decision logic) and fall back to
+interpret mode off-TPU.
 
 All helpers run *inside* shard_map: `jax.lax.axis_index`/`all_to_all` refer
 to the mesh axis passed as `axis`.
@@ -31,6 +45,10 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import histogram as _histogram_kernel
+from repro.kernels import segment_spmv as _segment_spmv_kernel
+from repro.kernels import walk_step as _walk_step_kernel
 
 try:  # jax >= 0.6 stable API
     from jax import shard_map as _shard_map
@@ -125,6 +143,101 @@ def exchange_stacked(lanes: list, axis: str, num_targets: int,
     return [recv[:, i] for i in range(F)]
 
 
+def entry_nbytes(*columns) -> int:
+    """Bytes per lane entry: the sum of the dtype sizes of the payload
+    columns actually exchanged (dicts of columns count every value).
+
+    The single home of wire accounting — engines charge
+    `sent_entries * entry_nbytes(<the exchanged arrays>)`, so the telemetry
+    bytes track the payload by construction instead of via hand-maintained
+    magic constants.
+    """
+    total = 0
+    for col in columns:
+        if isinstance(col, dict):
+            total += sum(jnp.asarray(v).dtype.itemsize for v in col.values())
+        else:
+            total += jnp.asarray(col).dtype.itemsize
+    return int(total)
+
+
+def _seg_reduce(values: jnp.ndarray, seg: jnp.ndarray, num_segments: int,
+                use_pallas: bool) -> jnp.ndarray:
+    """Sum `values` into `num_segments` buckets; out-of-range seg ids drop.
+
+    With `use_pallas` the reduction runs through the `segment_spmv` kernel
+    (fp32 accumulation — exact for integer counts below 2**24, which the
+    int32 coupon-pool guard already implies for per-vertex counts)."""
+    if use_pallas:
+        return _segment_spmv_kernel(values.astype(jnp.float32), seg,
+                                    num_segments).astype(values.dtype)
+    return jax.ops.segment_sum(values, jnp.where(
+        (seg >= 0) & (seg < num_segments), seg, num_segments),
+        num_segments=num_segments + 1)[:num_segments]
+
+
+def vertex_histogram(v: jnp.ndarray, mask: jnp.ndarray, num_vertices: int,
+                     use_pallas: bool = False) -> jnp.ndarray:
+    """[num_vertices] histogram of `v[mask]` (any shape, flattened).
+
+    The per-vertex count builder feeding `route_counts`; `use_pallas`
+    runs it through the `histogram` kernel."""
+    v = v.reshape(-1)
+    mask = mask.reshape(-1)
+    if use_pallas:
+        return _histogram_kernel(jnp.where(mask, v, -1), num_vertices)
+    return jax.ops.segment_sum(
+        mask.astype(jnp.int32),
+        jnp.where(mask & (v >= 0) & (v < num_vertices), v, num_vertices),
+        num_segments=num_vertices + 1)[:num_vertices]
+
+
+def route_counts(per_vertex: jnp.ndarray, *, axis: str,
+                 shard_id: jnp.ndarray, n_loc: int, shards: int,
+                 by_source: bool = False, use_pallas: bool = False):
+    """One Lemma-1 aggregated exchange: per-destination-vertex counts
+    travel as (vertex, count) pairs — payload bounded by the number of
+    distinct destination vertices, independent of how many walks move.
+
+    `per_vertex` is a [shards * n_loc] int32 count vector indexed by global
+    (padded) vertex id. Counts destined for vertices this shard owns are
+    applied locally and never hit the wire. At most `n_loc` distinct
+    vertices can target one owner, so the built-in lane capacity of `n_loc`
+    makes lane overflow structurally impossible (no waiting, no dropping).
+
+    Returns (arrivals, sent_entries, sent_bytes): `arrivals` is the
+    [n_loc] count of items delivered to each owned vertex, or
+    [shards, n_loc] broken down by source shard when `by_source` (the own
+    shard's contribution sits in row `shard_id`).
+    """
+    n_pad = shards * n_loc
+    vid = jnp.arange(n_pad, dtype=jnp.int32)
+    owner = vid // n_loc
+    own = per_vertex.reshape(shards, n_loc)[shard_id]
+    remote = (owner != shard_id) & (per_vertex > 0)
+    sendable, flat_idx = lane_slots(owner, remote, shards, n_loc)
+    lanes_v = pack_lanes(flat_idx, vid, sendable, shards, n_loc, fill=-1)
+    lanes_c = pack_lanes(flat_idx, per_vertex, sendable, shards, n_loc,
+                         fill=0)
+    recv_v, recv_c = exchange_stacked([lanes_v, lanes_c], axis, shards,
+                                      n_loc)
+    got = recv_v >= 0
+    sent_entries = jnp.sum(lanes_v >= 0)
+    sent_bytes = sent_entries * entry_nbytes(lanes_v, lanes_c)
+    local_v = recv_v - shard_id * n_loc          # in [0, n_loc) where got
+    cnt = jnp.where(got, recv_c, 0)
+    if by_source:
+        src = jnp.arange(shards * n_loc, dtype=jnp.int32) // n_loc
+        seg = jnp.where(got, src * n_loc + local_v, n_pad)
+        arrivals = _seg_reduce(cnt, seg, n_pad,
+                               use_pallas).reshape(shards, n_loc)
+        arrivals = arrivals.at[shard_id].add(own)
+    else:
+        seg = jnp.where(got, local_v, n_loc)
+        arrivals = _seg_reduce(cnt, seg, n_loc, use_pallas) + own
+    return arrivals, sent_entries, sent_bytes
+
+
 def route_walks(pos: jnp.ndarray, fields: Dict[str, jnp.ndarray], *,
                 axis: str, shard_id: jnp.ndarray, n_loc: int, shards: int,
                 route_cap: int):
@@ -132,9 +245,10 @@ def route_walks(pos: jnp.ndarray, fields: Dict[str, jnp.ndarray], *,
     another shard (up to `route_cap` per target; the rest wait).
 
     `fields` are extra int32 payload columns riding along with `pos`
-    (coupon ids, lengths, flags, ...). Returns
-    (kept_pos, kept_fields, recv_pos, recv_fields, waited, sent_entries);
-    `recv_*` are [shards * route_cap] with -1 in empty `recv_pos` slots.
+    (coupon ids, lengths, flags, ...). Returns (kept_pos, kept_fields,
+    recv_pos, recv_fields, waited, sent_entries, sent_bytes); `recv_*` are
+    [shards * route_cap] with -1 in empty `recv_pos` slots, and
+    `sent_bytes` charges `entry_nbytes` over the columns actually shipped.
     """
     valid = pos >= 0
     owner = jnp.where(valid, pos // n_loc, shards)
@@ -156,7 +270,9 @@ def route_walks(pos: jnp.ndarray, fields: Dict[str, jnp.ndarray], *,
                    for name, vals in fields.items()}
     waited = jnp.sum(needs & ~sendable)
     sent_entries = jnp.sum(send_pos >= 0)
-    return kept_pos, kept_fields, recv_pos, recv_fields, waited, sent_entries
+    sent_bytes = sent_entries * entry_nbytes(pos, fields)
+    return (kept_pos, kept_fields, recv_pos, recv_fields, waited,
+            sent_entries, sent_bytes)
 
 
 def merge_walks(kept_pos: jnp.ndarray, kept_fields: Dict[str, jnp.ndarray],
@@ -180,30 +296,41 @@ def merge_walks(kept_pos: jnp.ndarray, kept_fields: Dict[str, jnp.ndarray],
 
 
 def count_owned_arrivals(mask: jnp.ndarray, v_global: jnp.ndarray,
-                         shard_id: jnp.ndarray, n_loc: int) -> jnp.ndarray:
+                         shard_id: jnp.ndarray, n_loc: int,
+                         use_pallas: bool = False) -> jnp.ndarray:
     """[n_loc] histogram of `v_global[mask]` rebased to this shard's range
     (masked entries dump into a discarded overflow segment)."""
+    local = jnp.where(mask, v_global - shard_id * n_loc, -1)
+    if use_pallas:
+        return _histogram_kernel(local, n_loc)
     return jax.ops.segment_sum(
-        mask.astype(jnp.int32),
-        jnp.where(mask, v_global - shard_id * n_loc, n_loc),
+        mask.astype(jnp.int32), jnp.where(mask, local, n_loc),
         num_segments=n_loc + 1)[:n_loc]
 
 
 def advance_owned(rp: jnp.ndarray, ci: jnp.ndarray, dg: jnp.ndarray,
                   pos: jnp.ndarray, eligible: jnp.ndarray,
                   k_term: jnp.ndarray, k_edge: jnp.ndarray, eps: float,
-                  shard_id: jnp.ndarray, n_loc: int):
+                  shard_id: jnp.ndarray, n_loc: int,
+                  use_pallas: bool = False):
     """One PageRank step for the `eligible` walks of this shard: terminate
     w.p. eps (or on a dangling vertex), else move along a uniform out-edge.
 
     Returns (survive, dst): `survive` marks walks that moved, `dst` their
-    new global vertex (meaningful only where `survive`)."""
+    new global vertex (meaningful only where `survive`). The `use_pallas`
+    path draws the SAME uniforms and applies the same decision logic inside
+    the `walk_step` kernel, so both paths are bit-identical."""
     cap = pos.shape[0]
     local = jnp.where(eligible, pos - shard_id * n_loc, 0)
-    deg = dg[local]
     u_term = jax.random.uniform(k_term, (cap,))
-    survive = eligible & (u_term >= eps) & (deg > 0)
     u_edge = jax.random.uniform(k_edge, (cap,))
+    if use_pallas:
+        new_pos, new_alive = _walk_step_kernel(
+            local, eligible.astype(jnp.int32), u_term, u_edge, rp, ci, dg,
+            eps=eps)
+        return new_alive != 0, new_pos
+    deg = dg[local]
+    survive = eligible & (u_term >= eps) & (deg > 0)
     j = jnp.minimum((u_edge * jnp.maximum(deg, 1)).astype(jnp.int32),
                     jnp.maximum(deg - 1, 0))
     eid = jnp.clip(rp[local] + j, 0, ci.shape[0] - 1)

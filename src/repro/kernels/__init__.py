@@ -7,8 +7,9 @@
 Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper; interpret on CPU), ref.py (pure-jnp oracle).
 """
+from repro.kernels.common import resolve_use_pallas
 from repro.kernels.histogram import histogram
 from repro.kernels.segment_spmv import segment_spmv
 from repro.kernels.walk_step import walk_step
 
-__all__ = ["histogram", "segment_spmv", "walk_step"]
+__all__ = ["histogram", "resolve_use_pallas", "segment_spmv", "walk_step"]

@@ -24,3 +24,16 @@ def default_interpret() -> bool:
     """Pallas kernels target TPU; on CPU (this container) run the kernel
     body in interpret mode — identical semantics, Python execution."""
     return jax.default_backend() != "tpu"
+
+
+def resolve_use_pallas(flag=None) -> bool:
+    """Resolve an engine's `use_pallas` argument: an explicit True/False
+    wins; `None` defers to the REPRO_USE_PALLAS environment variable
+    (1/true/yes/on, case-insensitive), default off. Lets CI flip the whole
+    engine matrix onto the kernel paths without threading a flag through
+    every entry point."""
+    if flag is not None:
+        return bool(flag)
+    import os
+    return os.environ.get("REPRO_USE_PALLAS", "").strip().lower() in (
+        "1", "true", "yes", "on")

@@ -8,20 +8,30 @@ Engine selection (`--algo`):
   counts    Algorithm 1, count-aggregated engine (Lemma-1 wire: per-vertex
             coupon counts, payload independent of the walk count).
   improved  Algorithm 2 (IMPROVED-PAGERANK), three-phase sharded engine:
-            sqrt(log n)-length short-walk pre-computation, coupon
-            stitching with static connector exchanges, owner-shard visit
-            counting (see `repro.core.distributed_improved`).
+            sqrt(log n)-length short-walk pre-computation, count-
+            aggregated coupon stitching, one-exchange owner-shard visit
+            counting (see `repro.core.distributed_improved`). All three
+            phases move Lemma-1 aggregated (vertex, count) payloads.
   directed  Section 5 (directed/LOCAL), the same three-phase engine with
             uniform per-node coupon budgets, lam = sqrt(log n / eps)
-            short walks, dangling-node resets, and worst-case (LOCAL)
-            buffer sizing (see `repro.core.distributed_directed`).
+            short walks, and dangling-node resets (see
+            `repro.core.distributed_directed`). Count aggregation retired
+            the worst-case LOCAL buffers this engine used to need: lane
+            volume is bounded by distinct vertices, not walk multiplicity.
             Pair it with `--graph directed_web` to exercise a power-law
             directed fixture.
+
+`--use-pallas` routes every engine's hot paths (walk stepping, arrival
+histograms, count reductions) through the Pallas kernels in
+`repro.kernels` — interpret mode on CPU, compiled on TPU. The kernels
+share decision logic and uniforms with the jnp fallbacks, so results are
+bit-identical either way; the REPRO_USE_PALLAS env var is the flagless
+default (the `counts` engine takes only the env var).
 
 Fault tolerance applies to EVERY engine: `--checkpoint-dir` enables
 periodic snapshots, `--fail-at R [R ...]` injects simulated failures at
 the listed global rounds (for the 3-phase engines, round indices span all
-five phases, so a failure can land at a phase boundary or mid-phase), and
+phases, so a failure can land at a phase boundary or mid-phase), and
 recovery from the latest snapshot is bit-exact — the recovered run prints
 the same pi, telemetry, and accuracy as an unfailed one, plus restarts>0.
 `--resume` cold-starts from the latest snapshot in --checkpoint-dir (a
@@ -33,16 +43,26 @@ CI smoke legs.
 
 Telemetry printed for `--algo improved` and `--algo directed` (also
 available on the returned `ImprovedDistResult`/`DirectedDistResult`):
-  phase rounds   per-phase superstep counts: phase1 (short walks), report
-                 (coupon summaries to home shards), phase2 (stitching),
-                 phase3 (replay counting), tail (naive fallback) — their
-                 sum is the engine's total round count, the quantity the
-                 paper bounds by O(sqrt(log n)/eps) undirected resp.
-                 O(sqrt(log n / eps)) directed.
+  phase rounds   per-phase superstep counts: phase1 (short walks, <= lam),
+                 report (always 0 — coupons never migrate, so the old
+                 coupon-summary report phase no longer exists; the column
+                 stays as a regression tripwire), phase2 (stitching),
+                 phase3 (always 1 — counting is ONE aggregated exchange
+                 over the home-local trajectory tables, not a replay),
+                 tail (naive fallback) — their sum is the engine's total
+                 round count, the quantity the paper bounds by
+                 O(sqrt(log n)/eps) undirected resp. O(sqrt(log n / eps))
+                 directed.
   coupons        created vs used pool sizes and exhausted walks (pool
                  ran dry -> naive fallback).
-  wire           all_to_all payload bytes by phase, plus `dropped` (buffer
-                 overflows, must be 0) and `waited` (lane carry-overs).
+  wire           all_to_all payload bytes by phase. Every phase ships
+                 Lemma-1 aggregated (vertex, count) entries — 8 B/entry
+                 for stitch/count traffic, 8+12 B/entry for the Phase-1
+                 request/reply — and each column is charged as
+                 entries * entry_nbytes(<the routed columns>), derived
+                 from the actual lane dtypes (never a hand-kept
+                 constant). `dropped` (lane overflows) must be 0;
+                 `waited` counts tail-lane carry-overs.
   budget         (`directed` only) the uniform per-node coupon budget and
                  the dangling-node count (out-degree 0, immediate reset).
 """
@@ -84,7 +104,8 @@ def _report_accuracy(pi, g, eps: float, check: bool = False,
 
 
 def run_walks(g, eps: float, walks_per_node: int, checkpoint_dir,
-              fail_at, seed: int, resume: bool = False):
+              fail_at, seed: int, resume: bool = False,
+              use_pallas: bool = False):
     devs = np.array(jax.devices())
     mesh = Mesh(devs, (AXIS,))
     shards = devs.size
@@ -110,7 +131,8 @@ def run_walks(g, eps: float, walks_per_node: int, checkpoint_dir,
                       waited=jnp.int32(0))
     rp, ci, dg = (jax.device_put(x, spec)
                   for x in (sg.row_ptr, sg.col_idx, sg.out_deg))
-    step = _make_superstep(mesh, eps, sg.n_loc, shards, route_cap, 0)
+    step = _make_superstep(mesh, eps, sg.n_loc, shards, route_cap, 0,
+                           use_pallas=use_pallas)
 
     def step_fn(s):
         s2, active, _ = step(rp, ci, dg, s)
@@ -134,7 +156,7 @@ def run_walks(g, eps: float, walks_per_node: int, checkpoint_dir,
 def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
         checkpoint_dir: str | None, fail_at: list[int], seed: int = 0,
         algo: str = "walks", avg_deg: float = 6.0, resume: bool = False,
-        check: bool = False):
+        check: bool = False, use_pallas: bool = False):
     if resume and not checkpoint_dir:
         raise SystemExit("[pagerank] --resume needs --checkpoint-dir "
                          "(there is no snapshot to cold-start from)")
@@ -142,7 +164,7 @@ def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
         else GENERATORS[graph_kind](n)
     if algo == "walks":
         pi = run_walks(g, eps, walks_per_node, checkpoint_dir, fail_at,
-                       seed, resume=resume)
+                       seed, resume=resume, use_pallas=use_pallas)
     elif algo == "counts":
         res = distributed_pagerank_counts(
             g, eps, walks_per_node, jax.random.PRNGKey(seed),
@@ -157,7 +179,7 @@ def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
                   else distributed_directed_pagerank)
         res = engine(g, eps, walks_per_node, jax.random.PRNGKey(seed),
                      checkpoint_dir=checkpoint_dir, fail_at=fail_at,
-                     resume=resume)
+                     resume=resume, use_pallas=use_pallas)
         print(f"[pagerank] algo={algo} n={g.n} shards={res.shards} "
               f"lam={res.lam} eta={res.eta} ell={res.ell} "
               f"rounds={res.rounds} restarts={res.restarts} "
@@ -200,10 +222,14 @@ def main():
     ap.add_argument("--check", action="store_true",
                     help="non-zero exit if the accuracy report misses "
                          "L1 < 0.15 / top-10 >= 0.6 (CI smoke gate)")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route the hot paths through the Pallas kernels "
+                         "(bit-identical results; interpret mode on CPU). "
+                         "REPRO_USE_PALLAS=1 is the flagless equivalent")
     args = ap.parse_args()
     run(args.n, args.eps, args.walks, args.graph, args.checkpoint_dir,
         args.fail_at, seed=args.seed, algo=args.algo, avg_deg=args.avg_deg,
-        resume=args.resume, check=args.check)
+        resume=args.resume, check=args.check, use_pallas=args.use_pallas)
 
 
 if __name__ == "__main__":

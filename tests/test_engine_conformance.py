@@ -38,7 +38,8 @@ EPS = 0.2
 K = 100          # walks per node (Monte Carlo sample size)
 K_DIR = 40       # sharded Section-5: uniform pools scale ~K*log^2, so use a
                  # smaller (still ample: l1 ~ 1/sqrt(nK)) sample to keep the
-                 # worst-case LOCAL buffers CI-sized
+                 # coupon pool tables (and the single-device twin) CI-sized;
+                 # wire/lanes no longer care — counts aggregate per vertex
 L1_TOL = 0.15
 MASS_TOL = 0.10
 TOPK_MIN = 0.6

@@ -1,0 +1,45 @@
+"""Regression tests for the estimator's float64 scaling.
+
+The bug: `pagerank_from_visits` used to scale the integer visit counters
+in float32 (the repo runs with JAX x64 off). float32 is integer-exact only
+up to 2**24, so once K*n/eps pushes individual zeta entries past ~16.7M
+the cast collapsed *distinct* counters onto the same float — adjacent
+vertices with different visit counts got bit-identical pi. The fix scales
+on the host in numpy float64.
+"""
+import numpy as np
+
+from repro.core.estimator import pagerank_from_visits
+
+
+def test_large_counters_stay_distinct():
+    # 2**24 and 2**24 + 1 collide in float32 (the rounding that motivated
+    # the fix) but must map to distinct estimates
+    z = np.array([2 ** 24, 2 ** 24 + 1], dtype=np.int64)
+    assert np.float32(z[0]) == np.float32(z[1])          # f32 would merge
+    pi = pagerank_from_visits(z, n=1_000_000, walks_per_node=64, eps=0.1)
+    assert pi.dtype == np.float64
+    assert pi[0] != pi[1]
+    # and the ordering survives
+    assert pi[1] > pi[0]
+
+
+def test_scaling_is_exact_in_float64():
+    # zeta * eps / (n*K) reproduced against exact rational arithmetic
+    n, K, eps = 4096, 128, 0.25
+    z = np.array([0, 1, n * K, 3 * n * K + 7], dtype=np.int64)
+    pi = pagerank_from_visits(z, n=n, walks_per_node=K, eps=eps)
+    expect = z.astype(np.float64) * (eps / (n * K))
+    np.testing.assert_array_equal(pi, expect)
+    # the eps/(nK) mass identity at zeta == nK/eps: pi sums to ~1 there
+    full = np.full(n, int(K / eps), dtype=np.int64)
+    mass = pagerank_from_visits(full, n=n, walks_per_node=K, eps=eps).sum()
+    assert abs(mass - 1.0) < 1e-9
+
+
+def test_accepts_jax_and_numpy_inputs():
+    import jax.numpy as jnp
+    z32 = jnp.arange(8, dtype=jnp.int32)
+    out = pagerank_from_visits(z32, n=8, walks_per_node=2, eps=0.5)
+    assert isinstance(out, np.ndarray) and out.dtype == np.float64
+    np.testing.assert_allclose(out, np.arange(8) * 0.5 / 16.0)

@@ -90,3 +90,118 @@ def test_spmv_powers_power_iteration(small_graphs):
     pi_b, _, _ = power_iteration(g, 0.2, use_pallas=True)
     np.testing.assert_allclose(np.asarray(pi_a), np.asarray(pi_b),
                                rtol=2e-4, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# engine-shaped inputs: the distributions the distributed engines actually
+# feed the kernels (padded lanes, dead walks, dangling resets, integer
+# counts), not uniform random sweeps
+# ---------------------------------------------------------------------------
+
+def test_histogram_padded_lane_shape(key):
+    """Routing-lane shape: mostly -1 padding, valid ids clustered (a lane
+    carries one destination shard's vertices)."""
+    W, n = 4096, 64
+    ids = np.full(W, -1, dtype=np.int32)
+    k1, k2 = jax.random.split(key)
+    npos = int(jax.random.randint(k1, (), 1, 200))
+    ids[:npos] = np.asarray(jax.random.randint(k2, (npos,), 0, n))
+    ids = jnp.asarray(ids)
+    np.testing.assert_array_equal(np.asarray(histogram(ids, n)),
+                                  np.asarray(histogram_ref(ids, n)))
+
+
+def test_histogram_all_padding():
+    ids = jnp.full((512,), -1, jnp.int32)
+    np.testing.assert_array_equal(np.asarray(histogram(ids, 16)),
+                                  np.zeros(16, np.int32))
+
+
+def test_spmv_integer_counts_exact():
+    """route_counts reduces int32 visit counts through the kernel's f32
+    accumulator: sums must stay integer-exact below 2**24."""
+    big = 2 ** 23  # two of these sum to 2**24, the last exact f32 integer
+    val = jnp.asarray(np.array([big, big, 1, 2, 3], np.float32))
+    dst = jnp.asarray(np.array([0, 0, 1, 1, 1], np.int32))
+    got = np.asarray(segment_spmv(val, dst, 2))
+    np.testing.assert_array_equal(got, [2.0 ** 24, 6.0])
+
+
+def test_walk_step_dangling_reset(key):
+    """Dangling vertices (out-degree 0) must kill the walk on the spot —
+    the directed engines' reset convention."""
+    # graph: 0 -> 1, 1 dangling
+    rp = jnp.asarray([0, 1, 1], jnp.int32)
+    ci = jnp.asarray([1], jnp.int32)
+    dg = jnp.asarray([1, 0], jnp.int32)
+    pos = jnp.asarray([0, 1, 1], jnp.int32)
+    alive = jnp.ones((3,), bool)
+    ut = jnp.full((3,), 0.99)          # above any eps: no random reset
+    ue = jnp.zeros((3,))
+    new_pos, new_alive = walk_step(pos, alive, ut, ue, rp, ci, dg, eps=0.2)
+    np.testing.assert_array_equal(np.asarray(new_alive), [1, 0, 0])
+    assert int(new_pos[0]) == 1
+
+
+def test_advance_owned_pallas_parity(key):
+    """`routing.advance_owned` draws the uniforms once and feeds both
+    paths: jnp and the walk_step kernel must agree bit-for-bit on an
+    engine-shaped buffer (dead slots, -1 padding, dangling resets)."""
+    from repro.core.distributed import shard_graph
+    from repro.graphs import directed_web
+    from repro.core.routing import advance_owned, count_owned_arrivals
+
+    g = directed_web(96, 5.0, seed=3)
+    sg = shard_graph(g, 1)
+    rp, ci, dg = sg.row_ptr[0], sg.col_idx[0], sg.out_deg[0]
+    k1, k2, kt, ke = jax.random.split(key, 4)
+    cap = 512
+    pos = jax.random.randint(k1, (cap,), -1, g.n)     # -1 = empty slot
+    eligible = (pos >= 0) & jax.random.bernoulli(k2, 0.7, (cap,))
+    sid = jnp.int32(0)
+    a = advance_owned(rp, ci, dg, pos, eligible, kt, ke, 0.2, sid,
+                      sg.n_loc, use_pallas=False)
+    b = advance_owned(rp, ci, dg, pos, eligible, kt, ke, 0.2, sid,
+                      sg.n_loc, use_pallas=True)
+    surv_a, dst_a = np.asarray(a[0]), np.asarray(a[1])
+    surv_b, dst_b = np.asarray(b[0]), np.asarray(b[1])
+    np.testing.assert_array_equal(surv_a, surv_b)
+    # dst is only meaningful where the walk survived
+    np.testing.assert_array_equal(dst_a[surv_a], dst_b[surv_b])
+    # downstream arrival counting agrees too
+    ca = count_owned_arrivals(a[0], dst_a, sid, sg.n_loc, use_pallas=False)
+    cb = count_owned_arrivals(b[0], dst_b, sid, sg.n_loc, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(ca), np.asarray(cb))
+
+
+ENGINE_PALLAS_PARITY_CODE = """
+import json
+import jax, numpy as np
+from repro.graphs import erdos_renyi
+from repro.core.distributed_improved import distributed_improved_pagerank
+
+g = erdos_renyi(96, 5.0, seed=1)
+runs = {}
+for flag in (False, True):
+    r = distributed_improved_pagerank(g, 0.2, walks_per_node=100,
+                                      key=jax.random.PRNGKey(7),
+                                      use_pallas=flag)
+    runs[flag] = r
+a, b = runs[False], runs[True]
+print(json.dumps(dict(
+    zeta_equal=bool(np.array_equal(np.asarray(a.zeta), np.asarray(b.zeta))),
+    pi_equal=bool(np.array_equal(np.asarray(a.pi), np.asarray(b.pi))),
+    rounds=[a.rounds, b.rounds],
+    wire=[a.a2a_bytes_total, b.a2a_bytes_total])))
+"""
+
+
+def test_engine_pallas_bit_parity():
+    """The full 3-phase engine is bit-identical with the Pallas hot paths
+    on and off: the kernels share decision logic and uniforms with the
+    jnp fallbacks, so use_pallas may change *only* the execution path."""
+    from conftest import run_forced_devices
+    r = run_forced_devices(ENGINE_PALLAS_PARITY_CODE)
+    assert r["zeta_equal"] and r["pi_equal"]
+    assert r["rounds"][0] == r["rounds"][1]
+    assert r["wire"][0] == r["wire"][1]

@@ -1,0 +1,95 @@
+"""Round-budget regressions for the 3-phase engines.
+
+The bug this pins: the directed engine's report phase used to take ~P
+drain rounds at P shards (7 at 8 shards vs 2 at 2 shards) because its
+lane cap was computed from the per-home pool *maximum* rather than the
+worst-case resident count — the fixed `_lane_cap` rule plus count
+aggregation removed the phase outright. Under Lemma 1 the coupon
+summaries are home-local (coupons never migrate), so:
+
+  report_rounds == 0   (no report phase exists any more)
+  phase3_rounds == 1   (counting is ONE aggregated exchange, not a replay)
+  phase1_rounds <= lam (one round per short-walk step opportunity)
+
+and none of these budgets may grow with the shard count.
+"""
+import json
+
+import pytest
+
+from conftest import run_forced_devices
+
+from repro.core.distributed_improved import _lane_cap
+
+
+# ---------------------------------------------------------------------------
+# _lane_cap: the single home of the route_cap >= ceil(W/P) rule
+# ---------------------------------------------------------------------------
+
+def test_lane_cap_uses_ceil_division():
+    # W % P != 0 must round UP (floor division was the original under-size)
+    assert _lane_cap(None, 10, 4, floor=1) == 3
+    assert _lane_cap(None, 12, 4, floor=1) == 3
+    assert _lane_cap(None, 13, 4, floor=1) == 4
+
+
+def test_lane_cap_floor_and_explicit_override():
+    assert _lane_cap(None, 8, 4) == 64          # floor dominates tiny loads
+    assert _lane_cap(100, 300, 4) == 100        # explicit cap >= need: kept
+
+
+def test_lane_cap_rejects_undersized_override():
+    with pytest.raises(AssertionError):
+        _lane_cap(2, 100, 4)                    # 2 < ceil(100/4)
+
+
+# ---------------------------------------------------------------------------
+# engine round budgets must not scale with the shard count
+# ---------------------------------------------------------------------------
+
+ROUNDS_CODE = """
+import json
+import jax, numpy as np
+from repro.graphs import directed_web, erdos_renyi
+from repro.core.distributed_improved import distributed_improved_pagerank
+from repro.core.distributed_directed import distributed_directed_pagerank
+
+out = {}
+g = erdos_renyi(96, 5.0, seed=1)
+r = distributed_improved_pagerank(g, 0.2, walks_per_node=100,
+                                  key=jax.random.PRNGKey(7))
+out["imp"] = dict(p1=r.phase1_rounds, rep=r.report_rounds,
+                  p3=r.phase3_rounds, lam=r.lam, dropped=r.dropped)
+gd = directed_web(96, 5.0, seed=3)
+rd = distributed_directed_pagerank(gd, 0.2, walks_per_node=40,
+                                   key=jax.random.PRNGKey(7))
+out["dir"] = dict(p1=rd.phase1_rounds, rep=rd.report_rounds,
+                  p3=rd.phase3_rounds, lam=rd.lam, dropped=rd.dropped)
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def rounds_at_8():
+    return run_forced_devices(ROUNDS_CODE, devices=8)
+
+
+def test_no_report_phase(rounds_at_8):
+    # the 7-rounds-at-8-shards report blowup: the phase no longer exists
+    assert rounds_at_8["imp"]["rep"] == 0
+    assert rounds_at_8["dir"]["rep"] == 0
+
+
+def test_counting_is_one_exchange(rounds_at_8):
+    assert rounds_at_8["imp"]["p3"] == 1
+    assert rounds_at_8["dir"]["p3"] == 1
+
+
+def test_phase1_bounded_by_lambda(rounds_at_8):
+    assert 1 <= rounds_at_8["imp"]["p1"] <= rounds_at_8["imp"]["lam"]
+    assert 1 <= rounds_at_8["dir"]["p1"] <= rounds_at_8["dir"]["lam"]
+
+
+def test_nothing_dropped_at_8_shards(rounds_at_8):
+    assert rounds_at_8["imp"]["dropped"] == 0
+    assert rounds_at_8["dir"]["dropped"] == 0

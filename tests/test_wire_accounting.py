@@ -1,0 +1,181 @@
+"""Wire-accounting regression tests (the `entries * <magic constant>`
+bugfix sweep).
+
+Every all_to_all payload in the repo is now charged as
+`entries * entry_nbytes(<the actual routed columns>)` instead of a
+hand-maintained magic byte count, so the telemetry can never silently
+drift from the payload again. These tests pin the helper itself and the
+helper-vs-payload agreement of the count-aggregated exchanges.
+"""
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import run_forced_devices
+
+from repro.core.routing import entry_nbytes
+
+
+# ---------------------------------------------------------------------------
+# entry_nbytes: derived from dtypes, not hardcoded
+# ---------------------------------------------------------------------------
+
+def test_entry_nbytes_single_int32_column():
+    assert entry_nbytes(jnp.zeros(4, jnp.int32)) == 4
+
+
+def test_entry_nbytes_mixed_columns():
+    # x64 is off in this repo, so int32/float32 are the widest wire dtypes
+    assert entry_nbytes(jnp.zeros(4, jnp.int32),
+                        jnp.zeros(4, jnp.int16)) == 6
+    assert entry_nbytes(jnp.zeros(4, jnp.int8),
+                        jnp.zeros(4, jnp.float32)) == 5
+
+
+def test_entry_nbytes_field_dict():
+    # route_walks charges pos + every routed field by its actual dtype
+    fields = dict(cid=jnp.zeros(4, jnp.int32), mode=jnp.zeros(4, jnp.int8))
+    assert entry_nbytes(jnp.zeros(4, jnp.int32), fields) == 4 + 4 + 1
+
+
+def test_entry_nbytes_follows_dtype_change():
+    # the regression: a dtype change must move the byte count with it
+    assert (entry_nbytes(jnp.zeros(2, jnp.int32))
+            == 2 * entry_nbytes(jnp.zeros(2, jnp.int16)))
+
+
+# ---------------------------------------------------------------------------
+# route_counts: conservation + helper-vs-payload agreement
+# ---------------------------------------------------------------------------
+
+ROUTE_COUNTS_CODE = """
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core.routing import entry_nbytes, route_counts, shard_map
+
+shards = len(jax.devices())
+n_loc = 8
+n_pad = shards * n_loc
+mesh = Mesh(np.array(jax.devices()), ("shards",))
+
+# every shard holds a full per-vertex count vector; deterministic pattern
+rng = np.random.default_rng(0)
+cnt = rng.integers(0, 5, size=(shards, n_pad)).astype(np.int32)
+
+def local(cv):
+    cv = cv[0]
+    sid = jax.lax.axis_index("shards")
+    arrivals, entries, nbytes = route_counts(
+        cv, axis="shards", shard_id=sid, n_loc=n_loc, shards=shards)
+    return (arrivals[None],
+            jax.lax.psum(entries, "shards"),
+            jax.lax.psum(nbytes, "shards"))
+
+fn = shard_map(local, mesh, in_specs=(P("shards"),),
+               out_specs=(P("shards"), P(), P()))
+arr, entries, nbytes = fn(jax.device_put(
+    jnp.asarray(cnt), NamedSharding(mesh, P("shards"))))
+arr = np.asarray(arr)
+
+# conservation: every count lands exactly once at its owner
+expect = cnt.sum(axis=0).reshape(shards, n_loc)
+ok_conserve = bool((arr == expect).all())
+
+# payload agreement: 2 int32 lanes (vertex id + count) = 8 B/entry
+per_entry = entry_nbytes(jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32))
+ok_bytes = int(nbytes) == int(entries) * per_entry
+
+# entries = nonzero remote cells, an exact count we can recompute on host
+owner = np.arange(n_pad) // n_loc
+expect_entries = sum(int(((cnt[p] > 0) & (owner != p)).sum())
+                     for p in range(shards))
+print(json.dumps(dict(ok_conserve=ok_conserve, ok_bytes=ok_bytes,
+                      entries=int(entries),
+                      expect_entries=expect_entries,
+                      per_entry=int(per_entry))))
+"""
+
+
+def test_route_counts_conservation_and_bytes():
+    r = run_forced_devices(ROUTE_COUNTS_CODE)
+    assert r["ok_conserve"], "route_counts lost or duplicated counts"
+    assert r["ok_bytes"], "sent_bytes disagrees with entry_nbytes * entries"
+    assert r["entries"] == r["expect_entries"]
+    assert r["per_entry"] == 8
+
+
+ROUTE_COUNTS_BY_SOURCE_CODE = """
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core.routing import route_counts, shard_map
+
+shards = len(jax.devices())
+n_loc = 8
+n_pad = shards * n_loc
+mesh = Mesh(np.array(jax.devices()), ("shards",))
+rng = np.random.default_rng(1)
+cnt = rng.integers(0, 4, size=(shards, n_pad)).astype(np.int32)
+
+def local(cv):
+    cv = cv[0]
+    sid = jax.lax.axis_index("shards")
+    arrivals, entries, nbytes = route_counts(
+        cv, axis="shards", shard_id=sid, n_loc=n_loc, shards=shards,
+        by_source=True)
+    return arrivals[None], jax.lax.psum(entries, "shards")
+
+fn = shard_map(local, mesh, in_specs=(P("shards"),),
+               out_specs=(P("shards"), P()))
+arr, entries = fn(jax.device_put(
+    jnp.asarray(cnt), NamedSharding(mesh, P("shards"))))
+arr = np.asarray(arr).reshape(shards, shards, n_loc)
+
+# by_source keeps the (source shard, owned vertex) resolution: owner p's
+# row h must be exactly source h's counts for p's vertices
+ok = all(bool((arr[p, h] == cnt[h, p * n_loc:(p + 1) * n_loc]).all())
+         for p in range(shards) for h in range(shards))
+print(json.dumps(dict(ok=ok)))
+"""
+
+
+def test_route_counts_by_source_row_placement():
+    r = run_forced_devices(ROUTE_COUNTS_BY_SOURCE_CODE)
+    assert r["ok"], "by_source row placement lost the source resolution"
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: engine wire telemetry equals trace entries * bytes-per-entry
+# ---------------------------------------------------------------------------
+
+ENGINE_WIRE_CODE = """
+import json
+import jax, numpy as np
+from repro.graphs import erdos_renyi
+from repro.core.distributed_improved import distributed_improved_pagerank
+
+g = erdos_renyi(96, 5.0, seed=1)
+r = distributed_improved_pagerank(g, 0.2, walks_per_node=100,
+                                  key=jax.random.PRNGKey(7))
+p1, p2, p3 = r.phase1_rounds, r.phase2_rounds, r.phase3_rounds
+traces = [t.messages for t in r.report.traces]
+# Phase-2 rounds sit right after Phase 1 in the trace log; each round's
+# payload is (vertex, count) pairs of 2 int32 lanes = 8 B/entry
+p2_entries = sum(traces[p1:p1 + p2])
+p3_entries = sum(traces[p1 + p2:p1 + p2 + p3])
+print(json.dumps(dict(
+    wire=r.a2a_bytes_by_phase, p2_entries=p2_entries,
+    p3_entries=p3_entries, total=r.a2a_bytes_total)))
+"""
+
+
+def test_engine_phase_wire_matches_trace_entries():
+    r = run_forced_devices(ENGINE_WIRE_CODE)
+    assert r["wire"]["phase2"] == 8 * r["p2_entries"]
+    assert r["wire"]["phase3"] == 8 * r["p3_entries"]
+    assert r["total"] == sum(r["wire"].values())
+    # the report phase is gone entirely under count aggregation
+    assert r["wire"]["report"] == 0
