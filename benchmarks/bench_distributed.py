@@ -30,6 +30,18 @@ tables), and prices the network at zero. The round and wire columns are
 the paper-relevant measures; the wall-clock columns are honest about
 what this simulation actually pays.
 
+Power-law rows (8-shard leg only): the count-aggregated engines rerun on
+a hub-heavy `barabasi_albert_hub` graph (forced hub of degree ~n/4 next
+to a median degree of ~3) twice — with the degree-bucketed aggregate
+sampler (the default) and with `bucketed=False` (the pre-bucketing
+single-bucket layout, same code path) — and the row reports both warm
+wall times AND both engines' `sampler_us` telemetry (wall microseconds
+inside the sample program alone), plus the per-bucket occupancy. The
+draws are bit-identical across the two layouts (counter RNG), so the
+`sampler_speedup` column isolates exactly the O(max_deg) -> O(bucket
+width) chain-scan win the bucketing exists for; on hub-heavy graphs it
+should be >= 2x.
+
 `--json [PATH]` additionally writes the raw rows to a machine-readable
 artifact (default BENCH_distributed.json) so the perf trajectory can be
 tracked across PRs.
@@ -56,7 +68,7 @@ from repro.core.distributed import distributed_pagerank
 from repro.core.distributed_counts import distributed_pagerank_counts
 from repro.core.distributed_directed import distributed_directed_pagerank
 from repro.core.distributed_improved import distributed_improved_pagerank
-from repro.graphs import directed_web, erdos_renyi
+from repro.graphs import barabasi_albert_hub, directed_web, erdos_renyi
 
 def phases(r):
     return dict(p1=r.phase1_rounds, report=r.report_rounds,
@@ -109,6 +121,38 @@ out.append(dict(K=K, shards=rd.shards, directed=True,
                 dir_phases=phases(rd), dir_wire=rd.a2a_bytes_by_phase,
                 dir_coupons=coupons(rd),
                 dir_budget=rd.uniform_budget, dir_dropped=rd.dropped))
+
+# Power-law hub stress (8-shard leg): bucketed vs flat sampler layout.
+# Same keys -> bit-identical trajectories, so the sampler_us delta is
+# pure layout (O(max_deg) chain scan vs O(bucket width)).
+if jax.device_count() >= 8:
+    gh = barabasi_albert_hub(1024, 3, seed=7)
+    K = 100
+    rb, tb, cb = timed(
+        lambda k: distributed_pagerank_counts(gh, 0.2, K, k), 60)
+    rf, tf, cf = timed(
+        lambda k: distributed_pagerank_counts(gh, 0.2, K, k,
+                                              bucketed=False), 60)
+    rib, tib, cib = timed(
+        lambda k: distributed_improved_pagerank(gh, 0.2, K, k), 80)
+    rif, tif, cif = timed(
+        lambda k: distributed_improved_pagerank(gh, 0.2, K, k,
+                                                bucketed=False), 80)
+    out.append(dict(
+        K=K, shards=rb.shards, powerlaw=True, n=gh.n,
+        max_deg=int(max(gh.out_deg)),
+        count_us=tb, count_cold_us=cb, count_flat_us=tf,
+        count_sampler_us=rb.sampler_us,
+        count_flat_sampler_us=rf.sampler_us,
+        count_rounds=rb.rounds, count_occupancy=list(rb.occupancy),
+        count_dropped=rb.overflow + rf.overflow
+        + abs(rb.residual) + abs(rf.residual),
+        imp_us=tib, imp_cold_us=cib, imp_flat_us=tif,
+        imp_sampler_us=rib.sampler_us,
+        imp_flat_sampler_us=rif.sampler_us,
+        imp_rounds=rib.rounds, imp_occupancy=list(rib.p1_occupancy),
+        imp_dropped=rib.dropped + rif.dropped
+        + abs(rib.residual) + abs(rif.residual)))
 print(json.dumps(out))
 """
 
@@ -144,6 +188,31 @@ def report(rows):
             print(f"dist_shards{r['shards']},0,ERROR={r['error'][:80]}")
             continue
         p, k = r["shards"], r["K"]
+        if r.get("powerlaw"):
+            c_spd = (r["count_flat_sampler_us"]
+                     / max(r["count_sampler_us"], 1.0))
+            i_spd = (r["imp_flat_sampler_us"]
+                     / max(r["imp_sampler_us"], 1.0))
+            print(f"dist_hubcount_P{p}_K{k},{r['count_us']:.0f},"
+                  f"cold_us={r['count_cold_us']:.0f};"
+                  f"flat_us={r['count_flat_us']:.0f};"
+                  f"rounds={r['count_rounds']};"
+                  f"sampler_us={r['count_sampler_us']:.0f};"
+                  f"flat_sampler_us={r['count_flat_sampler_us']:.0f};"
+                  f"sampler_speedup={c_spd:.2f}x;"
+                  f"max_deg={r['max_deg']};"
+                  f"occupancy={r['count_occupancy']};"
+                  f"dropped={r['count_dropped']}")
+            print(f"dist_hubimproved_P{p}_K{k},{r['imp_us']:.0f},"
+                  f"cold_us={r['imp_cold_us']:.0f};"
+                  f"flat_us={r['imp_flat_us']:.0f};"
+                  f"rounds={r['imp_rounds']};"
+                  f"sampler_us={r['imp_sampler_us']:.0f};"
+                  f"flat_sampler_us={r['imp_flat_sampler_us']:.0f};"
+                  f"sampler_speedup={i_spd:.2f}x;"
+                  f"occupancy={r['imp_occupancy']};"
+                  f"dropped={r['imp_dropped']}")
+            continue
         if r.get("directed"):
             cp = r["dir_coupons"]
             print(f"dist_dirwalk_P{p}_K{k},{r['walk_us']:.0f},"

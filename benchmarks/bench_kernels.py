@@ -2,36 +2,45 @@
 
 Wall-times here are CPU interpret-mode (correctness path); the derived
 column reports the *structural* TPU roofline estimate per kernel:
-bytes touched / HBM bandwidth (all three kernels are memory-bound gathers
+bytes touched / HBM bandwidth (all four kernels are memory-bound gathers
 or one-hot reductions at our sizes).
+
+`--smoke` (the CI leg) runs a reduced-size sweep and, for the
+multinomial_rows kernel, additionally asserts the Pallas path is
+bit-identical to the jnp ref — a cheap cross-check that runs in every
+(devices, pallas) cell of the CI matrix.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.graphs import barabasi_albert
+from repro.kernels.multinomial_rows import multinomial_rows
+from repro.kernels.multinomial_rows.ref import multinomial_rows_ref
+from repro.kernels.walk_step import walk_step
 from repro.kernels.histogram import histogram
 from repro.kernels.segment_spmv import segment_spmv
-from repro.kernels.walk_step import walk_step
 
 HBM_BW = 819e9
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
     key = jax.random.PRNGKey(0)
     g = barabasi_albert(1024, 4, seed=5)
 
-    W, n = 65536, 1024
+    W, n = (8192, 256) if smoke else (65536, 1024)
     ids = jax.random.randint(key, (W,), 0, n)
     t0 = time.perf_counter()
     jax.block_until_ready(histogram(ids, n))
     dt = time.perf_counter() - t0
     bytes_touched = W * 4 + n * 4
-    rows.append(("histogram_64k", dt * 1e6,
+    rows.append((f"histogram_{W // 1024}k", dt * 1e6,
                  f"tpu_roofline_us={bytes_touched / HBM_BW * 1e6:.2f}"))
 
     E = g.m
@@ -52,13 +61,45 @@ def run():
                                     g.out_deg, eps=0.2))
     dt = time.perf_counter() - t0
     bytes_touched = W * (4 * 5) + (g.n * 8 + g.m * 4)
-    rows.append((f"walk_step_64k", dt * 1e6,
+    rows.append((f"walk_step_{W // 1024}k", dt * 1e6,
                  f"tpu_roofline_us={bytes_touched / HBM_BW * 1e6:.2f}"))
+
+    # fused aggregate-multinomial sampler (ref vs Pallas, same draws)
+    R, width = (2048, 8) if smoke else (16384, 16)
+    k1, k2 = jax.random.split(key)
+    counts = jax.random.randint(k1, (R,), 0, 5000)
+    deg = jax.random.randint(k2, (R,), 0, width + 1)
+    rid = jnp.arange(R, dtype=jnp.int32)
+    kw = jnp.asarray(np.array([7, 13], np.uint32))
+    t0 = time.perf_counter()
+    ref = jax.block_until_ready(multinomial_rows_ref(
+        counts, deg, rid, kw, eps=0.2, width=width))
+    dt_ref = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pal = jax.block_until_ready(multinomial_rows(
+        counts, deg, rid, kw, eps=0.2, width=width))
+    dt_pal = time.perf_counter() - t0
+    bytes_touched = R * (4 * 3) + R * (width + 1) * 4
+    roofline = f"tpu_roofline_us={bytes_touched / HBM_BW * 1e6:.2f}"
+    rows.append((f"multinomial_rows_ref_R{R}", dt_ref * 1e6, roofline))
+    rows.append((f"multinomial_rows_pallas_R{R}", dt_pal * 1e6, roofline))
+    if smoke:
+        # CI gate: the kernel must be bit-identical to the jnp oracle
+        assert np.array_equal(np.asarray(ref), np.asarray(pal)), \
+            "multinomial_rows pallas/ref mismatch"
+        assert np.array_equal(np.asarray(ref).sum(axis=1),
+                              np.asarray(counts)), \
+            "multinomial_rows conservation leak"
     return rows
 
 
 def main():
-    rows = run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes + hard bit-parity assertions "
+                         "(the CI device-matrix leg)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")

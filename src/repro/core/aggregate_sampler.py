@@ -1,0 +1,219 @@
+"""Degree-bucketed aggregate multinomial sampler — the shared compute core
+of every count-moving engine.
+
+Problem: the conditional-binomial chain that splits an aggregate coupon
+count over a vertex's out-edges is a scan whose width used to be the
+GLOBAL max degree, so on power-law graphs one hub made every low-degree
+vertex pay hub cost: per-round sampler FLOPs were n * max_deg.
+
+Fix: group rows by power-of-two degree buckets. Bucket b holds rows with
+degree in (2^(b-1), 2^b] (bucket 0: degree 0 and 1) and scans width
+min(2^b, max_deg) <= 2 * degree, so the per-round FLOPs drop to
+sum_v O(deg(v)) — per-node work proportional to local degree, the
+property the paper's CONGEST model assumes. The grouping is a STATIC
+permutation computed on the host at shard/build time and memoized (like
+the engines' step makers); the per-round work is a python loop over the
+O(log max_deg) buckets, each a single `kernels.multinomial_rows` call
+(Pallas kernel or its jnp ref — same counter-RNG math, so `use_pallas`
+never changes the draws).
+
+Sharded engines run ONE traced program on every shard, so bucket
+capacities must be shard-uniform: `build_layout_sharded` takes the max
+row count per bucket over shards and pads each shard's permutation with
+-1 sentinels (gathered as count 0 — they never sample, never ship).
+
+`bucketed=False` (the pre-PR shape, kept for benchmarking and as the
+degenerate fallback) is the SAME machinery with a single bucket of width
+max_deg — one code path, two layouts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.multinomial_rows import multinomial_rows
+from repro.kernels.multinomial_rows.ref import multinomial_rows_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Static (hashable) shape of a bucketed row grouping.
+
+    widths[b]: chain scan width of bucket b (min(2^b, max_deg)).
+    caps[b]:   row slots in bucket b (shard-uniform max; >= real rows).
+    n_rows:    number of real rows the permutation indexes into.
+    """
+
+    widths: Tuple[int, ...]
+    caps: Tuple[int, ...]
+    n_rows: int
+
+    @property
+    def total_rows(self) -> int:
+        return sum(self.caps)
+
+    @property
+    def total_edges(self) -> int:
+        """Flat bucketed-adjacency length: sum of caps[b] * widths[b]."""
+        return sum(c * w for c, w in zip(self.caps, self.widths))
+
+    @property
+    def row_starts(self) -> Tuple[int, ...]:
+        out, s = [], 0
+        for c in self.caps:
+            out.append(s)
+            s += c
+        return tuple(out)
+
+    def tile(self, copies: int) -> "BucketLayout":
+        """Layout for `copies` stacked replicas of the same row set (the
+        Phase-1 home-major (home, vertex) row matrix)."""
+        return BucketLayout(widths=self.widths,
+                            caps=tuple(c * copies for c in self.caps),
+                            n_rows=self.n_rows * copies)
+
+
+def bucket_of(deg: np.ndarray) -> np.ndarray:
+    """Power-of-two bucket index per degree: 0 for deg <= 1, else
+    ceil(log2(deg))."""
+    d = np.maximum(np.asarray(deg, np.int64), 1)
+    return np.ceil(np.log2(d)).astype(np.int64)
+
+
+@lru_cache(maxsize=256)
+def _layout_cached(deg_bytes: bytes, rows_per_shard: int, shards: int,
+                   max_deg: int, bucketed: bool):
+    deg = np.frombuffer(deg_bytes, dtype=np.int32).reshape(shards,
+                                                           rows_per_shard)
+    if not bucketed or max_deg <= 1:
+        perm = np.tile(np.arange(rows_per_shard, dtype=np.int32),
+                       (shards, 1))
+        layout = BucketLayout(widths=(max(max_deg, 1),),
+                              caps=(rows_per_shard,),
+                              n_rows=rows_per_shard)
+        return layout, perm
+    n_b = int(np.ceil(np.log2(max_deg))) + 1
+    widths = tuple(min(1 << b, max_deg) for b in range(n_b))
+    b_of = bucket_of(deg)
+    counts = np.zeros((shards, n_b), np.int64)
+    for p in range(shards):
+        np.add.at(counts[p], b_of[p], 1)
+    caps = tuple(int(c) for c in counts.max(axis=0))
+    starts = np.concatenate([[0], np.cumsum(caps)[:-1]])
+    perm = np.full((shards, int(sum(caps))), -1, np.int32)
+    for p in range(shards):
+        fill = starts.copy()
+        for r in range(rows_per_shard):
+            b = b_of[p, r]
+            perm[p, fill[b]] = r
+            fill[b] += 1
+    layout = BucketLayout(widths=widths, caps=caps, n_rows=rows_per_shard)
+    return layout, perm
+
+
+def build_layout(deg: np.ndarray, max_deg: int, *,
+                 bucketed: bool = True) -> Tuple[BucketLayout, np.ndarray]:
+    """Single-shard layout: (layout, perm [total_rows] int32, -1 = pad)."""
+    deg = np.ascontiguousarray(np.asarray(deg, np.int32))
+    layout, perm = _layout_cached(deg.tobytes(), len(deg), 1, int(max_deg),
+                                  bool(bucketed))
+    return layout, perm[0]
+
+
+def build_layout_sharded(deg: np.ndarray, max_deg: int, *,
+                         bucketed: bool = True
+                         ) -> Tuple[BucketLayout, np.ndarray]:
+    """Shard-uniform layout from a [shards, n_loc] degree matrix:
+    (layout with caps = max over shards, perm [shards, total_rows])."""
+    deg = np.ascontiguousarray(np.asarray(deg, np.int32))
+    shards, n_loc = deg.shape
+    return _layout_cached(deg.tobytes(), n_loc, shards, int(max_deg),
+                          bool(bucketed))
+
+
+def bucketize_adjacency(nbr: np.ndarray, perm: np.ndarray,
+                        layout: BucketLayout, *,
+                        pad_dst: int = 0) -> np.ndarray:
+    """Flat bucketed neighbor table [*, total_edges]: bucket b contributes
+    a [caps[b], widths[b]] block of `nbr[perm]` rows (row-major). Padding
+    slots point at `pad_dst` — they only ever carry zero counts.
+
+    Round-trips to the flat padded adjacency bit-exactly: row perm[i]'s
+    first widths[b] slots are nbr[perm[i], :widths[b]], and every slot
+    beyond a row's bucket width is structurally count-free because the
+    row's degree is <= its bucket width (tests/test_property.py).
+    """
+    nbr = np.asarray(nbr)
+    lead = nbr.shape[:-2]
+    flat = np.empty(lead + (layout.total_edges,), nbr.dtype)
+    s_rows, s_edges = 0, 0
+    for cap, w in zip(layout.caps, layout.widths):
+        rows = perm[..., s_rows:s_rows + cap]
+        blk = np.take_along_axis(
+            nbr[..., :w], np.maximum(rows, 0)[..., None], axis=-2)
+        blk = np.where((rows < 0)[..., None], pad_dst, blk)
+        flat[..., s_edges:s_edges + cap * w] = blk.reshape(lead + (cap * w,))
+        s_rows += cap
+        s_edges += cap * w
+    return flat
+
+
+def sample_buckets(counts, deg, rid, key_words, perm, layout: BucketLayout,
+                   *, eps: float, use_pallas: bool
+                   ) -> Tuple[List[Tuple[jnp.ndarray, jnp.ndarray]],
+                              jnp.ndarray, jnp.ndarray]:
+    """Run the fused sampler over every bucket of `layout`.
+
+    counts/deg/rid: [n_rows] int32 vectors in ORIGINAL row order;
+    perm: [total_rows] int32 bucket-grouped row indices (-1 = padding).
+
+    Returns (samples, occupancy, residual):
+      samples   — per bucket (rows_b [caps[b]], T_b [caps[b], widths[b]+1])
+                  with T_b column 0 the termination count;
+      occupancy — [n_buckets] int32, rows with a nonzero count per bucket;
+      residual  — scalar int32, sum over rows of (count - T.sum()): 0 by
+                  construction (endpoint-exact chain), kept as a tripwire.
+    """
+    fn = multinomial_rows if use_pallas else multinomial_rows_ref
+    n = counts.shape[0]
+    samples, occ, residual = [], [], jnp.int32(0)
+    for start, cap, w in zip(layout.row_starts, layout.caps, layout.widths):
+        rows_b = jnp.asarray(perm[start:start + cap])
+        ok = rows_b >= 0
+        safe = jnp.clip(rows_b, 0, n - 1)
+        c_b = jnp.where(ok, counts[safe], 0)
+        d_b = jnp.where(ok, deg[safe], 0)
+        r_b = jnp.where(ok, rid[safe], 0)
+        T_b = fn(c_b, d_b, r_b, key_words, eps=eps, width=w)
+        samples.append((rows_b, T_b))
+        occ.append(jnp.sum(c_b > 0))
+        residual = residual + jnp.sum(c_b) - jnp.sum(T_b)
+    return samples, jnp.stack(occ).astype(jnp.int32), residual
+
+
+def flatten_moves(samples) -> jnp.ndarray:
+    """Per-edge counts [total_edges] aligned with `bucketize_adjacency`
+    (termination column dropped)."""
+    return jnp.concatenate([T[:, 1:].reshape(-1) for _, T in samples])
+
+
+def scatter_cells(samples, layout: BucketLayout, max_deg: int
+                  ) -> jnp.ndarray:
+    """Dense per-row outcome cells [n_rows * (max_deg + 1)] int32: cell
+    r*(max_deg+1) is row r's termination count, cell r*(max_deg+1)+1+j its
+    out-edge-j count (0 beyond the row's bucket width — structurally
+    count-free). This is the Phase-1 reply layout of the 3-phase engines.
+    """
+    size = layout.n_rows * (max_deg + 1)
+    out = jnp.zeros((size + 1,), jnp.int32)
+    for (rows_b, T_b), w in zip(samples, layout.widths):
+        base = jnp.where(rows_b < 0, size, rows_b * (max_deg + 1))
+        offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                1 + jnp.arange(w, dtype=jnp.int32)])
+        idx = jnp.minimum(base[:, None] + offs[None, :], size)
+        out = out.at[idx].set(T_b, mode="drop")
+    return out[:size]

@@ -19,11 +19,27 @@ Per super-step, per shard:
   3. per-edge counts aggregated per destination *vertex* and exchanged with
      one all_to_all of (vertex, count) lanes               (Lemma 1 wire)
   4. arrivals summed into counts + visit counters zeta
+
+Steps 1-2 run through the shared degree-bucketed aggregate sampler
+(`core/aggregate_sampler`): rows are grouped by power-of-two degree
+buckets via a static permutation computed at shard time (memoized like
+the step makers), and each bucket's chain scans the bucket width instead
+of the global max degree — per-round sampler FLOPs ~ sum_v deg(v), not
+n_loc * max_deg. Sampler RNG contract: draws are a pure counter-based
+function of (per-round key words, global row id = padded vertex id, slot
+index) — see `kernels/multinomial_rows/_math` — so rows sample
+independently of bucket order and blocking, `use_pallas` (kernel vs jnp
+ref) never changes the draws, and checkpoint replay stays bit-exact.
+The super-step is two jitted programs, sample then exchange, so the
+driver can clock the sampler separately: per-round sampler microseconds
+and per-bucket occupancy land in the host telemetry dict next to the
+wire counters (`sampler_us`, `occupancy`).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from functools import lru_cache, partial
 from typing import Optional, Sequence
 
@@ -32,16 +48,22 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.aggregate_sampler import (BucketLayout, build_layout_sharded,
+                                          bucketize_adjacency, flatten_moves,
+                                          sample_buckets)
 from repro.core.distributed import AXIS, shard_map
 from repro.core.estimator import pagerank_from_visits
 from repro.core.graph import CSRGraph
 from repro.core.routing import lane_slots
+from repro.kernels import resolve_use_pallas
+from repro.kernels.multinomial_rows._math import key_words
 from repro.runtime import Stage, StagedState, StageSchedule, run_staged
 
 
 @dataclasses.dataclass(frozen=True)
 class ShardedPaddedGraph:
-    """Per-shard padded adjacency with static cross-shard lane bounds."""
+    """Per-shard padded adjacency with static cross-shard lane bounds and
+    the degree-bucketed sampler layout (see `core/aggregate_sampler`)."""
 
     n: int
     n_pad: int
@@ -52,9 +74,14 @@ class ShardedPaddedGraph:
     valid: jnp.ndarray      # [P, n_loc, max_deg]
     deg: jnp.ndarray        # [P, n_loc]
     lane_cap: int           # max edges crossing any (src,dst) shard pair
+    layout: BucketLayout    # shard-uniform bucket caps/widths (static)
+    bperm: jnp.ndarray      # [P, layout.total_rows] bucket-grouped local
+                            # row ids (-1 = padding slot)
+    bnbr: jnp.ndarray       # [P, layout.total_edges] flat bucketed dst
 
 
-def shard_graph_padded(graph: CSRGraph, shards: int) -> ShardedPaddedGraph:
+def shard_graph_padded(graph: CSRGraph, shards: int, *,
+                       bucketed: bool = True) -> ShardedPaddedGraph:
     n_loc = math.ceil(graph.n / shards)
     n_pad = n_loc * shards
     md = max(graph.max_out_deg, 1)
@@ -77,12 +104,17 @@ def shard_graph_padded(graph: CSRGraph, shards: int) -> ShardedPaddedGraph:
     np.add.at(cut, (src_owner, dst_owner), 1)
     # lanes hold (vertex,count) pairs: at most min(cut, n_loc) distinct
     lane_cap = int(min(cut.max(), n_loc)) or 1
+    deg_sh = deg_pad.reshape(shards, n_loc)
+    nbr_sh = nbr.reshape(shards, n_loc, md)
+    layout, bperm = build_layout_sharded(deg_sh, md, bucketed=bucketed)
+    bnbr = bucketize_adjacency(nbr_sh, bperm, layout)
     return ShardedPaddedGraph(
         n=graph.n, n_pad=n_pad, n_loc=n_loc, shards=shards, max_deg=md,
-        nbr=jnp.asarray(nbr.reshape(shards, n_loc, md)),
+        nbr=jnp.asarray(nbr_sh),
         valid=jnp.asarray(valid.reshape(shards, n_loc, md)),
-        deg=jnp.asarray(deg_pad.reshape(shards, n_loc)),
-        lane_cap=lane_cap)
+        deg=jnp.asarray(deg_sh),
+        lane_cap=lane_cap,
+        layout=layout, bperm=jnp.asarray(bperm), bnbr=jnp.asarray(bnbr))
 
 
 @jax.tree_util.register_dataclass
@@ -109,22 +141,38 @@ def _multinomial_rows(key, survivors, deg, max_deg: int):
     return T.T, rem  # [n_loc, max_deg]
 
 
-def _superstep(nbr, valid, deg, counts, key, zeta, *, eps: float,
-               n_loc: int, shards: int, max_deg: int, lane_cap: int,
-               packed: bool = True):
-    nbr, valid, deg, counts, key, zeta = (
-        nbr[0], valid[0], deg[0], counts[0], key[0], zeta[0])
+def _sample_step(bperm, deg, counts, key, *, eps: float, n_loc: int,
+                 shards: int, layout: BucketLayout, use_pallas: bool):
+    """Program 1 of the super-step: the degree-bucketed aggregate draw.
+
+    Pure per-shard compute (no collectives beyond the telemetry psums), so
+    the driver can clock it separately — its wall time is the engine's
+    `sampler_us` telemetry. Returns the flat per-edge counts aligned with
+    `ShardedPaddedGraph.bnbr`, the advanced key, global per-bucket
+    occupancy, and the (must-be-zero) conservation residual.
+    """
+    bperm, deg, counts, key = bperm[0], deg[0], counts[0], key[0]
     shard_id = jax.lax.axis_index(AXIS)
-    key, k_term, k_split = jax.random.split(key, 3)
+    key, k_sample = jax.random.split(key)
+    # rid: globally-unique padded vertex id -> draws independent per vertex
+    rid = shard_id * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
+    samples, occ, residual = sample_buckets(
+        counts, deg, rid, key_words(k_sample), bperm, layout,
+        eps=eps, use_pallas=use_pallas)
+    flat_T = flatten_moves(samples)
+    occ = jax.lax.psum(occ, AXIS)
+    residual = jax.lax.psum(residual, AXIS)
+    return flat_T[None], key[None], occ, residual
 
-    term = jax.random.binomial(
-        k_term, counts.astype(jnp.float32), eps).astype(jnp.int32)
-    survivors = jnp.where(deg > 0, counts - term, 0)
-    T, _ = _multinomial_rows(k_split, survivors, deg, max_deg)
-    T = jnp.where(valid, T, 0)                          # [n_loc, max_deg]
 
-    flat_dst = nbr.reshape(-1)
-    flat_T = T.reshape(-1)
+def _exchange_step(bnbr, flat_T, zeta, *, n_loc: int, shards: int,
+                   lane_cap: int, packed: bool = True):
+    """Program 2 of the super-step: aggregate per destination vertex and
+    run the Lemma-1 (vertex, count) lane exchange."""
+    bnbr, flat_T, zeta = bnbr[0], flat_T[0], zeta[0]
+    shard_id = jax.lax.axis_index(AXIS)
+
+    flat_dst = bnbr
     owner = flat_dst // n_loc
     local_mask = owner == shard_id
     # local arrivals: direct segment-sum
@@ -195,33 +243,46 @@ def _superstep(nbr, valid, deg, counts, key, zeta, *, eps: float,
     new_zeta = zeta + arrive
     active = jax.lax.psum(jnp.sum(new_counts), AXIS)
     a2a_bytes = jax.lax.psum(wire_entries * bytes_per, AXIS)
-    return (new_counts[None], key[None], new_zeta[None],
-            active, a2a_bytes, overflow)
+    return new_counts[None], new_zeta[None], active, a2a_bytes, overflow
 
 
 # memoized like the other engines' step makers: the graph's static layout
-# (n_loc/shards/max_deg/lane_cap) is the cache key, not the array payload,
-# so repeat runs over same-shaped graphs skip recompilation
+# (n_loc/shards/bucket layout/lane_cap) is the cache key, not the array
+# payload, so repeat runs over same-shaped graphs skip recompilation
 @lru_cache(maxsize=64)
 def make_count_superstep(mesh: Mesh, eps: float, *, n_loc: int, shards: int,
-                         max_deg: int, lane_cap: int, packed: bool = True):
-    fn = partial(_superstep, eps=eps, n_loc=n_loc, shards=shards,
-                 max_deg=max_deg, lane_cap=lane_cap, packed=packed)
-    sharded = shard_map(
-        fn, mesh,
-        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
-        out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P()),
+                         layout: BucketLayout, lane_cap: int,
+                         packed: bool = True, use_pallas: bool = False):
+    """Returns (sample, exchange): the two jitted halves of the super-step.
+    The driver times `sample` (block_until_ready) for `sampler_us`."""
+    sample_sh = shard_map(
+        partial(_sample_step, eps=eps, n_loc=n_loc, shards=shards,
+                layout=layout, use_pallas=use_pallas),
+        mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS), P(), P()),
+    )
+    exch_sh = shard_map(
+        partial(_exchange_step, n_loc=n_loc, shards=shards,
+                lane_cap=lane_cap, packed=packed),
+        mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS), P(), P(), P()),
     )
 
     @jax.jit
-    def step(nbr, valid, deg, state: CountDistState):
-        counts, key, zeta, active, a2a, overflow = sharded(
-            nbr, valid, deg, state.counts, state.key, state.zeta)
+    def sample(bperm, deg, state: CountDistState):
+        return sample_sh(bperm, deg, state.counts, state.key)
+
+    @jax.jit
+    def exchange(bnbr, flat_T, key, state: CountDistState):
+        counts, zeta, active, a2a, overflow = exch_sh(
+            bnbr, flat_T, state.zeta)
         return (CountDistState(counts=counts, zeta=zeta, key=key,
                                round=state.round + 1),
                 active, a2a, overflow)
 
-    return step
+    return sample, exchange
 
 
 @dataclasses.dataclass
@@ -235,6 +296,10 @@ class CountDistResult:
     lane_cap: int
     restarts: int = 0            # supervisor recoveries (fault injection)
     checkpoints_written: int = 0
+    sampler_us: float = 0.0      # total wall time inside the sample program
+    occupancy: tuple = ()        # per-bucket rows-with-coupons, summed over
+                                 # rounds and shards (len = #buckets)
+    residual: int = 0            # conservation leak — must stay 0
 
 
 def distributed_pagerank_counts(graph: CSRGraph, eps: float,
@@ -246,41 +311,57 @@ def distributed_pagerank_counts(graph: CSRGraph, eps: float,
                                 fail_at: Optional[Sequence[int]] = None,
                                 checkpoint_every: int = 10,
                                 max_restarts: int = 16,
-                                resume: bool = False) -> CountDistResult:
+                                resume: bool = False,
+                                use_pallas=None,
+                                bucketed: bool = True) -> CountDistResult:
     """Count-aggregated Algorithm 1 across all devices of `mesh`.
 
     With `checkpoint_dir`/`fail_at` set, the super-step loop runs under the
     checkpoint-restart supervisor (single-stage schedule): recovery from an
     injected failure replays the identical trajectory (state includes the
-    PRNG keys), so the recovered run is bit-exact."""
+    PRNG keys), so the recovered run is bit-exact. `bucketed=False` keeps
+    the single-bucket max_deg-wide sampler layout (pre-bucketing shape,
+    for benchmarking); the draws themselves are layout-independent."""
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), (AXIS,))
+    use_pallas = resolve_use_pallas(use_pallas)
     shards = mesh.devices.size
-    sg = shard_graph_padded(graph, shards)
+    sg = shard_graph_padded(graph, shards, bucketed=bucketed)
     spec = NamedSharding(mesh, P(AXIS))
 
     counts0 = np.zeros((shards, sg.n_loc), np.int32)
     counts0.reshape(-1)[: graph.n] = walks_per_node
     keys = jax.random.split(key, shards)
-    nbr = jax.device_put(sg.nbr, spec)
-    valid = jax.device_put(sg.valid, spec)
     deg = jax.device_put(sg.deg, spec)
+    bperm = jax.device_put(sg.bperm, spec)
+    bnbr = jax.device_put(sg.bnbr, spec)
 
-    step = make_count_superstep(mesh, float(eps), n_loc=sg.n_loc,
-                                shards=sg.shards, max_deg=sg.max_deg,
-                                lane_cap=sg.lane_cap, packed=packed)
+    sample, exchange = make_count_superstep(
+        mesh, float(eps), n_loc=sg.n_loc, shards=sg.shards,
+        layout=sg.layout, lane_cap=sg.lane_cap, packed=packed,
+        use_pallas=use_pallas)
 
     def _step(ms: StagedState):
         a = ms.arrays
         st = CountDistState(counts=a["counts"], zeta=a["zeta"],
                             key=a["key"], round=a["round"])
-        st, active, a2a, ovf = step(nbr, valid, deg, st)
+        t0 = time.perf_counter()
+        flat_T, key2, occ, residual = sample(bperm, deg, st)
+        jax.block_until_ready(flat_T)
+        t1 = time.perf_counter()
+        st, active, a2a, ovf = exchange(bnbr, flat_T, key2, st)
         a.update(counts=st.counts, zeta=st.zeta, key=st.key, round=st.round)
         h = ms.host
+        active_i, a2a_i, ovf_i, occ_v, res_i = jax.device_get(
+            (active, a2a, ovf, occ, residual))
         h["rounds"] += 1
-        h["a2a"] += int(a2a)
-        h["overflow"] += int(ovf)
-        return ms, int(active) == 0 or h["rounds"] >= max_rounds
+        h["a2a"] += int(a2a_i)
+        h["overflow"] += int(ovf_i)
+        h["sampler_us"] += (t1 - t0) * 1e6
+        h["occupancy"] = [int(x) + int(y)
+                          for x, y in zip(h["occupancy"], occ_v)]
+        h["residual"] += int(res_i)
+        return ms, int(active_i) == 0 or h["rounds"] >= max_rounds
 
     schedule = StageSchedule([Stage("counts", _step)])
     ms = StagedState(
@@ -289,7 +370,8 @@ def distributed_pagerank_counts(graph: CSRGraph, eps: float,
                     zeta=jax.device_put(jnp.asarray(counts0), spec),
                     key=jax.device_put(keys, spec),
                     round=jnp.int32(0)),
-        host=dict(rounds=0, a2a=0, overflow=0))
+        host=dict(rounds=0, a2a=0, overflow=0, sampler_us=0.0,
+                  occupancy=[0] * len(sg.layout.caps), residual=0))
 
     def _put(name, arr):
         return (jnp.asarray(arr) if name == "round"
@@ -307,4 +389,7 @@ def distributed_pagerank_counts(graph: CSRGraph, eps: float,
                            a2a_bytes_total=ms.host["a2a"],
                            overflow=ms.host["overflow"], shards=shards,
                            lane_cap=sg.lane_cap, restarts=restarts,
-                           checkpoints_written=checkpoints_written)
+                           checkpoints_written=checkpoints_written,
+                           sampler_us=float(ms.host["sampler_us"]),
+                           occupancy=tuple(ms.host["occupancy"]),
+                           residual=int(ms.host["residual"]))

@@ -24,7 +24,17 @@ Phase 1 — short-walk pre-computation. Shard p owns the coupons of its
       row, a Binomial(c, eps) termination count (a dangling vertex
       terminates the whole row) and splits the survivors over the
       out-edges with a conditional-binomial multinomial — the aggregate
-      of c iid walk steps, never c individual steps;
+      of c iid walk steps, never c individual steps. The draws run
+      through the shared degree-bucketed aggregate sampler
+      (`core/aggregate_sampler`): rows grouped by power-of-two degree
+      buckets via a static shard-time permutation, each bucket's chain
+      scanning the bucket width instead of the global max degree, so
+      Phase-1 sampler FLOPs are ~ sum_v deg(v) per round. RNG contract:
+      counter-based draws keyed on (round key words, globally-unique row
+      id, slot) — see `kernels/multinomial_rows/_math` — so the results
+      are independent of bucket layout and of `use_pallas`, and replay
+      stays bit-exact. The sample program is split out of the round so
+      the driver can clock it (`sampler_us`, `p1_occupancy` telemetry);
     reply   — nonzero (vertex, outcome-class, count) cells go back to the
       home shard (12 B/entry); outcome class 0 is "terminated", class j
       is "moved to out-edge j" carrying the destination vertex id;
@@ -92,6 +102,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from functools import lru_cache, partial
 from typing import Dict, List, Optional, Sequence
 
@@ -101,9 +112,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.accounting import CongestReport, RoundTrace, default_bandwidth
+from repro.core.aggregate_sampler import (build_layout_sharded,
+                                          sample_buckets, scatter_cells)
 from repro.core.distributed import (AXIS, DistState, _make_superstep,
                                     shard_graph, shard_map)
-from repro.core.distributed_counts import _multinomial_rows
 from repro.core.estimator import pagerank_from_visits
 from repro.core.graph import CSRGraph
 from repro.core.improved_pagerank import coupon_pool_sizes
@@ -111,6 +123,7 @@ from repro.core.routing import (entry_nbytes, exchange_stacked, lane_slots,
                                 pack_lanes, route_counts, vertex_histogram)
 from repro.core.simple_pagerank import walks_per_node_for
 from repro.kernels import resolve_use_pallas
+from repro.kernels.multinomial_rows._math import key_words
 from repro.runtime import Stage, StagedState, StageSchedule, run_staged
 
 _INT32_MAX = 2 ** 31 - 1
@@ -120,39 +133,80 @@ _INT32_MAX = 2 ** 31 - 1
 # Phase 1: count-aggregated short-walk pre-computation
 # ---------------------------------------------------------------------------
 
-def _p1_local(rp, ci, dg, pos, alive, traj, key, t, *, eps: float,
-              n_loc: int, shards: int, md: int, rep_cap: int,
-              S_loc_pad: int, use_pallas: bool):
-    """One Phase-1 round on a single shard: request -> sample -> reply ->
-    assign (see module docstring). Coupons stay home-resident; `pos` is
-    slot s's current vertex, `traj[:, t]` records its move this round
-    (-1 = no move)."""
-    rp, ci, dg, pos, alive, traj, key = (
-        rp[0], ci[0], dg[0], pos[0], alive[0], traj[0], key[0])
+def _p1_request(pos, alive, *, n_loc: int, shards: int, use_pallas: bool):
+    """Phase-1 program 1 (request): per-vertex live-coupon counts to the
+    owners. Output row layout: c[home * n_loc + v] = coupons of `home`
+    currently at owned vertex v."""
+    pos, alive = pos[0], alive[0]
     shard_id = jax.lax.axis_index(AXIS)
     n_pad = shards * n_loc
-    C = S_loc_pad + 1
-    cells = n_loc * (md + 1)
-    key, k_term, k_split, k_perm = jax.random.split(key, 4)
-    elig = alive > 0
-
-    # ---- request: per-vertex live-coupon counts to the owners ----
-    req = vertex_histogram(pos, elig, n_pad, use_pallas=use_pallas)
+    req = vertex_histogram(pos, alive > 0, n_pad, use_pallas=use_pallas)
     c_by_home, req_entries, req_bytes = route_counts(
         req, axis=AXIS, shard_id=shard_id, n_loc=n_loc, shards=shards,
         by_source=True, use_pallas=use_pallas)
     c = c_by_home.reshape(-1)               # [P*n_loc], row = home*n_loc + v
+    req_entries = jax.lax.psum(req_entries, AXIS)
+    req_bytes = jax.lax.psum(req_bytes, AXIS)
+    return c[None], req_entries, req_bytes
 
-    # ---- owner: aggregate-sample outcomes per (home, vertex) row ----
-    # Each row is sampled independently (Binomial terminations + a
-    # conditional-binomial multinomial over the out-edges): the aggregate
-    # of that row's c iid walk steps. Dangling rows terminate whole.
+
+def _p1_sample(bperm, dg, c, key, *, eps: float, n_loc: int, shards: int,
+               md: int, layout, use_pallas: bool):
+    """Phase-1 program 2 (sample): the owner draws, independently for every
+    (home, vertex) row, the fused Binomial(eps) termination + conditional-
+    binomial edge split through the shared degree-bucketed sampler (a
+    dangling row terminates whole). Pure per-shard compute — the driver
+    clocks it for `sampler_us`. Returns the dense home-major outcome cells
+    f_cnt[(home*n_loc + v)*(md+1) + class] plus the advanced key, the
+    assignment key, per-bucket occupancy, and the conservation residual.
+
+    RNG contract: every draw is a pure counter-based function of the
+    per-round key words, rid = owner*n_pad + home*n_loc + v (globally
+    unique per row), and the slot index — independent of bucket order,
+    so bucketed/unbucketed layouts and kernel/ref paths are bit-identical.
+    """
+    bperm, dg, c, key = bperm[0], dg[0], c[0], key[0]
+    shard_id = jax.lax.axis_index(AXIS)
+    n_pad = shards * n_loc
+    key, k_sample, k_perm = jax.random.split(key, 3)
+
+    # tile the local bucket permutation across homes, bucket-major: bucket
+    # b's tiled rows are every home's bucket-b rows, offset by home*n_loc
+    # (-1 padding slots preserved). Matches layout.tile(shards).
+    offs = jnp.arange(shards, dtype=jnp.int32)[:, None] * n_loc
+    parts = []
+    for start, cap in zip(layout.row_starts, layout.caps):
+        pb = bperm[start:start + cap]
+        parts.append(jnp.where(pb[None, :] < 0, -1,
+                               offs + pb[None, :]).reshape(-1))
+    perm_t = jnp.concatenate(parts)
+    layout_t = layout.tile(shards)
+
     deg_row = jnp.tile(dg, shards)
-    term_draw = jax.random.binomial(
-        k_term, c.astype(jnp.float32), eps).astype(jnp.int32)
-    survivors = jnp.where(deg_row > 0, c - term_draw, 0)
-    T, _ = _multinomial_rows(k_split, survivors, deg_row, md)
-    cnt = jnp.concatenate([(c - survivors)[:, None], T], axis=1)
+    rid = shard_id * n_pad + jnp.arange(n_pad, dtype=jnp.int32)
+    samples, occ, residual = sample_buckets(
+        c, deg_row, rid, key_words(k_sample), perm_t, layout_t,
+        eps=eps, use_pallas=use_pallas)
+    f_cnt = scatter_cells(samples, layout_t, md)
+    occ = jax.lax.psum(occ, AXIS)
+    residual = jax.lax.psum(residual, AXIS)
+    return f_cnt[None], key[None], k_perm[None], occ, residual
+
+
+def _p1_assign(rp, ci, pos, alive, traj, f_cnt, k_perm, t, *,
+               n_loc: int, shards: int, md: int, rep_cap: int,
+               S_loc_pad: int):
+    """Phase-1 program 3 (reply + assign): route the nonzero outcome cells
+    back to the home shards and deal them out to the coupons by a
+    uniform-random within-vertex permutation (see module docstring)."""
+    rp, ci, pos, alive, traj, f_cnt, k_perm = (
+        rp[0], ci[0], pos[0], alive[0], traj[0], f_cnt[0], k_perm[0])
+    shard_id = jax.lax.axis_index(AXIS)
+    n_pad = shards * n_loc
+    C = S_loc_pad + 1
+    cells = n_loc * (md + 1)
+    elig = alive > 0
+
     eidx = jnp.clip(rp[:n_loc, None] + jnp.arange(md)[None, :], 0,
                     ci.shape[0] - 1)
     edge_dst = ci[eidx]                     # [n_loc, md] global dst per edge
@@ -164,7 +218,6 @@ def _p1_local(rp, ci, dg, pos, alive, traj, key, t, *, eps: float,
 
     # ---- reply: nonzero (vertex, class, count) cells to the home ----
     f_vid = jnp.repeat(vid, md + 1)
-    f_cnt = cnt.reshape(-1)
     f_dst = dst.reshape(-1)
     home = jnp.arange(shards * cells, dtype=jnp.int32) // cells
     remote = (f_cnt > 0) & (home != shard_id)
@@ -224,10 +277,10 @@ def _p1_local(rp, ci, dg, pos, alive, traj, key, t, *, eps: float,
 
     pending = jax.lax.psum(jnp.sum(survive), AXIS)
     overflow = jax.lax.psum(overflow, AXIS)
-    entries = jax.lax.psum(req_entries + rep_entries, AXIS)
-    nbytes = jax.lax.psum(req_bytes + rep_bytes, AXIS)
-    return (new_pos[None], new_alive[None], traj[None], key[None],
-            pending, overflow, entries, nbytes)
+    rep_entries = jax.lax.psum(rep_entries, AXIS)
+    rep_bytes = jax.lax.psum(rep_bytes, AXIS)
+    return (new_pos[None], new_alive[None], traj[None],
+            pending, overflow, rep_entries, rep_bytes)
 
 
 # The step makers are memoized: a fresh jitted closure per engine call
@@ -236,21 +289,28 @@ def _p1_local(rp, ci, dg, pos, alive, traj, key, t, *, eps: float,
 # byte-identical programs. jax interns Mesh objects, so repeat calls over
 # the same devices hit the cache even when the caller rebuilds the mesh.
 @lru_cache(maxsize=64)
-def _make_p1_step(mesh: Mesh, *, eps: float, n_loc: int, shards: int,
-                  md: int, rep_cap: int, S_loc_pad: int, use_pallas: bool):
-    fn = partial(_p1_local, eps=eps, n_loc=n_loc, shards=shards, md=md,
-                 rep_cap=rep_cap, S_loc_pad=S_loc_pad,
-                 use_pallas=use_pallas)
-    sharded = shard_map(
-        fn, mesh,
-        in_specs=(P(AXIS),) * 7 + (P(),),
-        out_specs=(P(AXIS),) * 4 + (P(),) * 4)
+def _make_p1_steps(mesh: Mesh, *, eps: float, n_loc: int, shards: int,
+                   md: int, rep_cap: int, S_loc_pad: int,
+                   layout, use_pallas: bool):
+    """Returns (request, sample, assign): the three jitted programs of one
+    Phase-1 round. Split so the driver can time the sampler alone."""
+    req_sh = shard_map(
+        partial(_p1_request, n_loc=n_loc, shards=shards,
+                use_pallas=use_pallas),
+        mesh, in_specs=(P(AXIS), P(AXIS)),
+        out_specs=(P(AXIS), P(), P()))
+    samp_sh = shard_map(
+        partial(_p1_sample, eps=eps, n_loc=n_loc, shards=shards, md=md,
+                layout=layout, use_pallas=use_pallas),
+        mesh, in_specs=(P(AXIS),) * 4,
+        out_specs=(P(AXIS),) * 3 + (P(),) * 2)
+    asn_sh = shard_map(
+        partial(_p1_assign, n_loc=n_loc, shards=shards, md=md,
+                rep_cap=rep_cap, S_loc_pad=S_loc_pad),
+        mesh, in_specs=(P(AXIS),) * 7 + (P(),),
+        out_specs=(P(AXIS),) * 3 + (P(),) * 4)
 
-    @jax.jit
-    def step(rp, ci, dg, pos, alive, traj, key, t):
-        return sharded(rp, ci, dg, pos, alive, traj, key, t)
-
-    return step
+    return jax.jit(req_sh), jax.jit(samp_sh), jax.jit(asn_sh)
 
 
 # ---------------------------------------------------------------------------
@@ -408,6 +468,10 @@ class ImprovedDistResult:
     total_visits: int = 0
     restarts: int = 0            # supervisor recoveries (fault injection)
     checkpoints_written: int = 0
+    sampler_us: float = 0.0      # total wall time in the Phase-1 sampler
+    p1_occupancy: tuple = ()     # per-bucket rows-with-coupons, summed over
+                                 # rounds and shards (len = #buckets)
+    residual: int = 0            # sampler conservation leak — must stay 0
 
 
 def distributed_improved_pagerank(
@@ -430,13 +494,16 @@ def distributed_improved_pagerank(
     checkpoint_every: int = 10,
     max_restarts: int = 16,
     resume: bool = False,
+    bucketed: bool = True,
 ) -> ImprovedDistResult:
     """Run Algorithm 2 across all devices of `mesh` (default: all devices).
 
     `cap2`/`route_cap2` size only the naive-tail buffers (Phases 1-3 are
     count-aggregated and size themselves). With `checkpoint_dir` and/or
     `fail_at` set, the phase-machine runs under the checkpoint-restart
-    supervisor (see `_run_three_phase`)."""
+    supervisor (see `_run_three_phase`). `bucketed=False` keeps the
+    single-bucket max_deg-wide Phase-1 sampler layout (the pre-bucketing
+    shape, for benchmarking); the draws are layout-independent."""
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), (AXIS,))
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -454,7 +521,7 @@ def distributed_improved_pagerank(
         max_rounds=max_rounds, bandwidth_bits=bandwidth_bits,
         use_pallas=use_pallas, checkpoint_dir=checkpoint_dir,
         fail_at=fail_at, checkpoint_every=checkpoint_every,
-        max_restarts=max_restarts, resume=resume)
+        max_restarts=max_restarts, resume=resume, bucketed=bucketed)
 
 
 def _run_three_phase(
@@ -478,6 +545,7 @@ def _run_three_phase(
     checkpoint_every: int = 10,
     max_restarts: int = 16,
     resume: bool = False,
+    bucketed: bool = True,
     result_cls: type = ImprovedDistResult,
     **extra_fields,
 ):
@@ -563,10 +631,17 @@ def _run_three_phase(
     key, k1, k_tail = jax.random.split(key, 3)
     k1_shards = jax.random.split(k1, shards)
 
+    # ---- Phase-1 degree-bucketed sampler layout (static, memoized) ----
+    deg_np = np.ascontiguousarray(
+        np.asarray(sg.out_deg, np.int32).reshape(shards, n_loc))
+    layout, bperm_np = build_layout_sharded(deg_np, md, bucketed=bucketed)
+    bperm_j = jax.device_put(jnp.asarray(bperm_np), spec)
+
     # ---- jitted per-phase step functions (shared by fresh + resumed) ----
-    p1_step = _make_p1_step(mesh, eps=float(eps), n_loc=n_loc,
-                            shards=shards, md=md, rep_cap=rep_cap,
-                            S_loc_pad=S_loc_pad, use_pallas=use_pallas)
+    p1_req, p1_samp, p1_asn = _make_p1_steps(
+        mesh, eps=float(eps), n_loc=n_loc, shards=shards, md=md,
+        rep_cap=rep_cap, S_loc_pad=S_loc_pad, layout=layout,
+        use_pallas=use_pallas)
     p2_step = _make_p2_step(mesh, n_loc=n_loc, shards=shards,
                             S_loc_pad=S_loc_pad, use_pallas=use_pallas)
     p3_step = _make_p3_step(mesh, n_loc=n_loc, shards=shards,
@@ -584,21 +659,31 @@ def _run_three_phase(
     def _phase1(ms: StagedState):
         a = ms.arrays
         t = jnp.int32(ms.host["phase1_rounds"])
-        pos, alive, traj, key1, pending, overflow, entries, nbytes = \
-            p1_step(sg_rp, sg_ci, sg_dg, a["pos"], a["alive"], a["traj"],
-                    a["key"], t)
+        c, req_entries, req_bytes = p1_req(a["pos"], a["alive"])
+        t0 = time.perf_counter()
+        f_cnt, key1, k_perm, occ, residual = p1_samp(
+            bperm_j, sg_dg, c, a["key"])
+        jax.block_until_ready(f_cnt)
+        t1 = time.perf_counter()
+        pos, alive, traj, pending, overflow, rep_entries, rep_bytes = \
+            p1_asn(sg_rp, sg_ci, a["pos"], a["alive"], a["traj"],
+                   f_cnt, k_perm, t)
         a.update(pos=pos, alive=alive, traj=traj, key=key1)
-        # one device sync for all four telemetry scalars, not four
-        pending, overflow, entries, nbytes = (
-            int(x) for x in
-            jax.device_get((pending, overflow, entries, nbytes)))
+        # one device sync for all the round's telemetry, not one per value
+        (pending, overflow, req_e, req_b, rep_e, rep_b, occ_v,
+         res) = jax.device_get((pending, overflow, req_entries, req_bytes,
+                                rep_entries, rep_bytes, occ, residual))
         h = ms.host
         h["phase1_rounds"] += 1
-        h["dropped"] += overflow
-        h["wire"]["phase1"] += nbytes
-        h["traces"].append([pending, entries])
+        h["dropped"] += int(overflow)
+        h["wire"]["phase1"] += int(req_b) + int(rep_b)
+        h["sampler_us"] += (t1 - t0) * 1e6
+        h["p1_occupancy"] = [int(x) + int(y)
+                             for x, y in zip(h["p1_occupancy"], occ_v)]
+        h["residual"] += int(res)
+        h["traces"].append([int(pending), int(req_e) + int(rep_e)])
         # each coupon gets exactly lam step opportunities, one per round
-        return ms, pending == 0 or h["phase1_rounds"] >= lam
+        return ms, int(pending) == 0 or h["phase1_rounds"] >= lam
 
     def _after_phase1(ms: StagedState) -> StagedState:
         # Coupons never moved buffers, so their summaries are already
@@ -729,6 +814,8 @@ def _run_three_phase(
                   stitches=0, terminated=0, exhausted=0, coupons_used=0,
                   tail_walks=0, tail_active=0,
                   wire=dict(phase1=0, report=0, phase2=0, phase3=0, tail=0),
+                  sampler_us=0.0, p1_occupancy=[0] * len(layout.caps),
+                  residual=0,
                   traces=[], phase2_records=[]))
 
     # ---------------- drive: plain loop or checkpointing supervisor ----
@@ -775,4 +862,7 @@ def _run_three_phase(
         a2a_bytes_total=sum(wire.values()), a2a_bytes_by_phase=wire,
         phase2_records=h["phase2_records"], report=report,
         total_visits=total_visits, restarts=restarts,
-        checkpoints_written=checkpoints_written, **extra_fields)
+        checkpoints_written=checkpoints_written,
+        sampler_us=float(h["sampler_us"]),
+        p1_occupancy=tuple(h["p1_occupancy"]),
+        residual=int(h["residual"]), **extra_fields)

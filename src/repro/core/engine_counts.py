@@ -7,9 +7,17 @@ the conditional-binomial chain, vectorized over all vertices). The int
 matrix T[v, j] of per-edge counts *is* the message set of the round
 (Lemma 1: counts, never identities).
 
-Slower than the walk-array engine (O(max_deg) binomial draws per round) but
-byte-for-byte faithful to the pseudocode — it is the reference for message
-accounting and for the engine-equivalence tests.
+Slower than the walk-array engine but byte-for-byte faithful to the
+pseudocode — it is the reference for message accounting and for the
+engine-equivalence tests. The per-round splits run through the shared
+degree-bucketed aggregate sampler (`core/aggregate_sampler`): the
+conditional-binomial chain scans each row's power-of-two bucket width
+instead of the global max degree, so per-round sampler FLOPs are
+sum_v O(deg(v)) — hubs no longer tax every low-degree vertex.
+`use_pallas` routes the draws through the `kernels/multinomial_rows`
+Pallas kernel (same counter-RNG math as the jnp ref, so results are
+bit-identical either way); `bucketed=False` keeps the single-bucket
+max_deg-wide layout for benchmarking the pre-bucketing shape.
 """
 from __future__ import annotations
 
@@ -19,9 +27,14 @@ from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.accounting import RoundTrace
+from repro.core.aggregate_sampler import (build_layout, bucketize_adjacency,
+                                          flatten_moves, sample_buckets)
 from repro.core.graph import CSRGraph, padded_adjacency
+from repro.kernels import resolve_use_pallas
+from repro.kernels.multinomial_rows._math import key_words
 
 
 @jax.tree_util.register_dataclass
@@ -57,20 +70,21 @@ def _multinomial_split(key, survivors, deg, max_deg: int):
     return T.T, rem
 
 
-@partial(jax.jit, static_argnames=("eps", "n", "max_deg"))
-def _step(nbr, deg, state: CountState, eps: float, n: int, max_deg: int):
-    key, k_term, k_split = jax.random.split(state.key, 3)
-    # terminations: each coupon independently resets w.p. eps
-    term = jax.random.binomial(
-        k_term, state.counts.astype(jnp.float32), eps).astype(jnp.int32)
-    survivors = state.counts - term
-    # dangling vertices: every coupon terminates (reset) — no out-edge
-    survivors = jnp.where(deg > 0, survivors, 0)
-    T, rem = _multinomial_split(k_split, survivors, deg, max_deg)
-    # route: new_counts[u] = sum over (v, j) with nbr[v,j] == u of T[v,j]
-    flat_dst = nbr.reshape(-1)
-    flat_T = T.reshape(-1)
-    new_counts = jax.ops.segment_sum(flat_T, flat_dst, num_segments=n)
+@partial(jax.jit, static_argnames=("eps", "n", "layout", "use_pallas"))
+def _step(bnbr, perm, deg, state: CountState, eps: float, n: int, layout,
+          use_pallas: bool):
+    """One super-step through the shared degree-bucketed sampler: each
+    bucket draws its fused Binomial(eps) termination + conditional-binomial
+    edge split (dangling rows terminate whole), then the per-edge counts
+    route through one segment-sum over the flat bucketed adjacency."""
+    key, k_sample = jax.random.split(state.key)
+    rid = jnp.arange(n, dtype=jnp.int32)
+    samples, _, residual = sample_buckets(
+        state.counts, deg, rid, key_words(k_sample), perm, layout,
+        eps=eps, use_pallas=use_pallas)
+    flat_T = flatten_moves(samples)
+    # route: new_counts[u] = sum over bucketed edge slots with dst == u
+    new_counts = jax.ops.segment_sum(flat_T, bnbr, num_segments=n)
     new_state = CountState(
         counts=new_counts.astype(jnp.int32),
         zeta=state.zeta + new_counts.astype(jnp.int32),
@@ -79,23 +93,30 @@ def _step(nbr, deg, state: CountState, eps: float, n: int, max_deg: int):
     )
     stats = dict(
         active=jnp.sum(state.counts),
-        moved=jnp.sum(T),
-        messages=jnp.sum(T > 0),
-        max_edge_count=jnp.max(T),
-        residual=jnp.sum(rem),  # must be 0 — multinomial exactness check
+        moved=jnp.sum(flat_T),
+        messages=jnp.sum(flat_T > 0),
+        max_edge_count=jnp.max(flat_T),
+        residual=residual,  # must be 0 — multinomial exactness check
     )
     return new_state, stats
 
 
 def run_traced(graph: CSRGraph, eps: float, walks_per_node: int,
-               key: jnp.ndarray, *, max_rounds: int = 100_000
+               key: jnp.ndarray, *, max_rounds: int = 100_000,
+               use_pallas=None, bucketed: bool = True
                ) -> Tuple[CountState, List[RoundTrace]]:
+    use_pallas = resolve_use_pallas(use_pallas)
     nbr, _ = padded_adjacency(graph)
     max_deg = int(nbr.shape[1])
+    layout, perm_np = build_layout(np.asarray(graph.out_deg), max_deg,
+                                   bucketed=bucketed)
+    bnbr = jnp.asarray(bucketize_adjacency(np.asarray(nbr), perm_np, layout))
+    perm = jnp.asarray(perm_np)
     state = init_state(graph, walks_per_node, key)
     traces: List[RoundTrace] = []
     while int(jnp.sum(state.counts)) > 0 and int(state.round) < max_rounds:
-        state, stats = _step(nbr, graph.out_deg, state, float(eps), graph.n, max_deg)
+        state, stats = _step(bnbr, perm, graph.out_deg, state, float(eps),
+                             graph.n, layout, use_pallas)
         assert int(stats["residual"]) == 0, "multinomial split leaked mass"
         traces.append(RoundTrace(
             active_walks=int(stats["active"]),

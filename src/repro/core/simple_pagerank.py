@@ -48,7 +48,8 @@ def simple_pagerank(graph: CSRGraph, eps: float, *, walks_per_node: int | None =
     traces: List[RoundTrace] = []
 
     if engine == "counts":
-        state, traces = engine_counts.run_traced(graph, eps, K, key)
+        state, traces = engine_counts.run_traced(graph, eps, K, key,
+                                                 use_pallas=use_pallas)
         zeta, rounds = state.zeta, int(state.round)
     elif engine == "walks" and traced:
         state, traces = engine_walks.run_traced(graph, eps, K, key,

@@ -1,6 +1,8 @@
-from repro.graphs.generators import (GENERATORS, barabasi_albert, directed_web,
+from repro.graphs.generators import (GENERATORS, barabasi_albert,
+                                     barabasi_albert_hub, directed_web,
                                      doc_link_graph, erdos_renyi, grid2d,
                                      random_regular, ring)
 
-__all__ = ["GENERATORS", "barabasi_albert", "directed_web", "doc_link_graph",
-           "erdos_renyi", "grid2d", "random_regular", "ring"]
+__all__ = ["GENERATORS", "barabasi_albert", "barabasi_albert_hub",
+           "directed_web", "doc_link_graph", "erdos_renyi", "grid2d",
+           "random_regular", "ring"]

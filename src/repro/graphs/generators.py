@@ -42,6 +42,7 @@ def erdos_renyi(n: int, avg_deg: float, seed: int = 0) -> CSRGraph:
 def barabasi_albert(n: int, m_attach: int = 3, seed: int = 0) -> CSRGraph:
     """Preferential attachment (power-law degrees) — congestion stressor."""
     rng = np.random.default_rng(seed)
+    m_attach = max(int(m_attach), 1)
     m0 = max(m_attach, 2)
     src_l, dst_l = [], []
     # seed clique
@@ -59,6 +60,23 @@ def barabasi_albert(n: int, m_attach: int = 3, seed: int = 0) -> CSRGraph:
             dst_l.append(u)
             targets.extend([v, u])
     return from_edges(np.array(src_l), np.array(dst_l), n, undirected=True)
+
+
+def barabasi_albert_hub(n: int, m_attach: int = 3, seed: int = 0) -> CSRGraph:
+    """Preferential attachment plus a forced hub wired to every 4th vertex:
+    max degree ~ n/4 while the median degree stays ~ m_attach. The
+    max_deg >> typical_deg regime is what the degree-bucketed sampler
+    exists for (the flat chain pays O(max_deg) at EVERY vertex here), so
+    this is the stress fixture for its tests and benchmarks."""
+    base = barabasi_albert(n, m_attach, seed)
+    src = np.repeat(np.arange(base.n), np.asarray(base.out_deg))
+    dst = np.asarray(base.col_idx)
+    hub = 0
+    spokes = np.arange(0, n, 4)
+    spokes = spokes[spokes != hub]
+    src = np.concatenate([src, np.full(len(spokes), hub)])
+    dst = np.concatenate([dst, spokes])
+    return from_edges(src, dst, n, undirected=True)
 
 
 def random_regular(n: int, d: int, seed: int = 0) -> CSRGraph:
@@ -110,6 +128,7 @@ GENERATORS = {
     "grid2d": grid2d,
     "erdos_renyi": erdos_renyi,
     "barabasi_albert": barabasi_albert,
+    "barabasi_albert_hub": barabasi_albert_hub,
     "random_regular": random_regular,
     "directed_web": directed_web,
 }

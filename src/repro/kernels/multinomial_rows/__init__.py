@@ -1,0 +1,3 @@
+from repro.kernels.multinomial_rows.ops import multinomial_rows
+
+__all__ = ["multinomial_rows"]

@@ -1,0 +1,169 @@
+"""Shared sampling math for the fused aggregate-multinomial kernel.
+
+Everything here is plain jnp on arrays, so the SAME functions run inside
+the Pallas kernel body and in the pure-jnp oracle — `use_pallas` switches
+only the execution path, never the draws, which keeps the engines
+bit-identical across the flag (the repo-wide kernel contract, see
+`tests/test_kernels.py::test_engine_pallas_bit_parity`).
+
+RNG contract — counter-based, per row:
+  u(row, t) = u01(fmix32(fmix32((rid * C1) ^ k0) + ((t * C2) ^ k1)))
+where `rid` is the caller-supplied globally-unique row id, `t` the draw
+index within the row (0 = the eps-termination draw, j+1 = chain slot j),
+and (k0, k1) the two uint32 words of a per-round PRNG key. Draws are pure
+functions of (k0, k1, rid, t): no split-chain threading, so rows sample
+independently in any blocking/order — exactly what a row-blocked kernel
+needs — and replay/checkpoint-recovery stays bit-exact.
+
+Binomial(n, p) from ONE uniform (hybrid, complement-flipped so pp <= 1/2):
+  * n*pp <= 10 — BINV inverse-CDF walk (exact CDF inversion, truncated at
+    `_BINV_ITERS`; the neglected tail mass is < 1e-15 at mean 10);
+  * n*pp  > 10 — normal approximation with the Acklam inverse-normal.
+The endpoints are EXACT in integer arithmetic: p == 0 returns 0 and
+p == 1 returns n itself (never n routed through float32) — this is what
+makes the conditional-binomial chain conserve mass bit-exactly at any
+count magnitude, fixing the former `jax.random.binomial(k, c.astype(f32))`
+truncation for counts above 2**24 (see tests/test_sampler_precision.py).
+The normal branch evaluates means in float32, so marginals for counts
+beyond 2**24 carry a ~1e-7 relative mean error — statistical, never a
+conservation leak.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BINV_ITERS = 48
+_BINV_MEAN_MAX = 10.0
+
+
+def _u32(x):
+    if isinstance(x, int):
+        return jnp.uint32(np.uint32(x))
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def _fmix32(x):
+    """murmur3 finalizer: full-avalanche 32-bit hash."""
+    x = x ^ (x >> _u32(16))
+    x = x * _u32(0x85EBCA6B)
+    x = x ^ (x >> _u32(13))
+    x = x * _u32(0xC2B2AE35)
+    x = x ^ (x >> _u32(16))
+    return x
+
+
+def counter_u01(rid, t, k0, k1):
+    """Uniform in (0, 1), a pure function of (k0, k1, rid, t)."""
+    h = _fmix32((_u32(rid) * _u32(0x9E3779B1)) ^ _u32(k0))
+    h = _fmix32(h + ((_u32(t) * _u32(0x85EBCA77)) ^ _u32(k1)))
+    # 24 mantissa bits, offset half a ulp: strictly inside (0, 1)
+    return ((h >> _u32(8)).astype(jnp.float32) + 0.5) * jnp.float32(2.0 ** -24)
+
+
+def _ndtri(u):
+    """Acklam's rational approximation to the inverse normal CDF."""
+    u = jnp.clip(u, 1e-7, 1.0 - 1e-7)
+    a = (-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00)
+    plow = 0.02425
+    # central region
+    q = u - 0.5
+    r = q * q
+    num = ((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]
+    den = ((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1.0
+    x_mid = q * num / den
+    # lower tail (upper tail by symmetry)
+    ul = jnp.minimum(u, 1.0 - u)
+    ql = jnp.sqrt(-2.0 * jnp.log(ul))
+    numt = ((((c[0] * ql + c[1]) * ql + c[2]) * ql + c[3]) * ql + c[4]) * ql \
+        + c[5]
+    dent = (((d[0] * ql + d[1]) * ql + d[2]) * ql + d[3]) * ql + 1.0
+    x_tail = numt / dent
+    x_tail = jnp.where(u < 0.5, x_tail, -x_tail)
+    tail = (u < plow) | (u > 1.0 - plow)
+    return jnp.where(tail, x_tail, x_mid).astype(jnp.float32)
+
+
+def binomial_counter(n, p, u):
+    """X ~ Binomial(n, p) from one uniform. n int32 >= 0, p float32.
+
+    Endpoint-exact (p==0 -> 0, p==1 -> n, in int arithmetic); hybrid
+    BINV / normal elsewhere — see the module docstring.
+    """
+    n = n.astype(jnp.int32)
+    n_f = n.astype(jnp.float32)
+    p = jnp.asarray(p, jnp.float32)
+    u = jnp.asarray(u, jnp.float32)
+    flip = p > 0.5
+    pp = jnp.where(flip, 1.0 - p, p)
+    mean = n_f * pp
+
+    # --- BINV: count how many prefix-CDF values u clears ---
+    q = pp / jnp.maximum(1.0 - pp, 0.5)       # pp <= 0.5 so 1-pp >= 0.5
+    pdf0 = jnp.exp(n_f * jnp.log1p(-pp))
+    x0 = jnp.zeros_like(n)
+
+    def body(k, carry):
+        pdf, cdf, x = carry
+        kf = k.astype(jnp.float32)
+        x = x + (u > cdf).astype(jnp.int32)
+        pdf = pdf * ((n_f - kf + 1.0) / kf) * q
+        cdf = cdf + pdf
+        return pdf, cdf, x
+
+    _, _, x_small = jax.lax.fori_loop(1, _BINV_ITERS + 1, body,
+                                      (pdf0, pdf0, x0))
+
+    # --- normal approximation with continuity correction ---
+    sd = jnp.sqrt(jnp.maximum(mean * (1.0 - pp), 1e-12))
+    x_norm = jnp.floor(mean + sd * _ndtri(u) + 0.5).astype(jnp.int32)
+
+    x = jnp.where(mean <= _BINV_MEAN_MAX, x_small, x_norm)
+    x = jnp.clip(x, 0, n)
+    return jnp.where(flip, n - x, x)
+
+
+def sample_rows_math(counts, deg, rid, k0, k1, *, eps: float, width: int):
+    """Fused termination + conditional-binomial chain for a block of rows.
+
+    counts/deg/rid: [R] int32. Returns T [R, width+1] int32 where column 0
+    is the termination count (a dangling row — deg == 0 — terminates
+    whole) and column 1+j the count sent down out-edge slot j. Rows with
+    deg <= width conserve mass exactly: T.sum(1) == counts, because the
+    last live slot draws p == 1 (endpoint-exact) and every draw is
+    clipped to [0, remaining].
+    """
+    counts = counts.astype(jnp.int32)
+    deg = deg.astype(jnp.int32)
+    u_t = counter_u01(rid, 0, k0, k1)
+    term = jnp.where(deg > 0,
+                     binomial_counter(counts, jnp.float32(eps), u_t),
+                     counts)
+    rem0 = counts - term
+
+    def body(rem, j):
+        u = counter_u01(rid, j + 1, k0, k1)
+        slots = jnp.maximum(deg - j, 1).astype(jnp.float32)
+        p = jnp.where(j < deg, 1.0 / slots, 0.0)
+        t = jnp.minimum(binomial_counter(rem, p, u), rem)
+        return rem - t, t
+
+    _, T = jax.lax.scan(body, rem0, jnp.arange(width, dtype=jnp.int32))
+    return jnp.concatenate([term[:, None], T.T], axis=1)
+
+
+def key_words(key):
+    """(k0, k1) uint32 words of a legacy PRNGKey array."""
+    kw = jnp.asarray(key).astype(jnp.uint32).reshape(-1)
+    return kw[:2]

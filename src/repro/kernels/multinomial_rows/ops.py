@@ -1,0 +1,13 @@
+"""Jitted public wrapper: Pallas on TPU, interpret elsewhere."""
+from __future__ import annotations
+
+from repro.kernels.common import default_interpret
+from repro.kernels.multinomial_rows.multinomial_rows import (
+    multinomial_rows_pallas)
+
+
+def multinomial_rows(counts, deg, rid, key_words, *, eps: float, width: int,
+                     **kw):
+    kw.setdefault("interpret", default_interpret())
+    return multinomial_rows_pallas(counts, deg, rid, key_words, eps=eps,
+                                   width=width, **kw)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused aggregate-multinomial sampler."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.multinomial_rows._math import sample_rows_math
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "width"))
+def multinomial_rows_ref(counts, deg, rid, key_words, *, eps: float,
+                         width: int):
+    """T [R, width+1] int32; column 0 = terminations, 1+j = out-edge j.
+
+    Same counter-RNG math as the Pallas kernel (`_math.sample_rows_math`),
+    evaluated over the whole row vector at once.
+    """
+    return sample_rows_math(counts, deg, rid, key_words[0], key_words[1],
+                            eps=eps, width=width)

@@ -65,6 +65,12 @@ available on the returned `ImprovedDistResult`/`DirectedDistResult`):
                  `waited` counts tail-lane carry-overs.
   budget         (`directed` only) the uniform per-node coupon budget and
                  the dangling-node count (out-degree 0, immediate reset).
+  sampler        (`counts`, `improved`, `directed`) degree-bucketed
+                 aggregate-sampler telemetry: total and per-round wall
+                 microseconds inside the sample program, per-bucket
+                 occupancy (rows holding coupons, summed over rounds and
+                 shards; bucket b covers degrees in (2^(b-1), 2^b]), and
+                 the conservation residual (must be 0).
 """
 from __future__ import annotations
 
@@ -168,11 +174,16 @@ def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
     elif algo == "counts":
         res = distributed_pagerank_counts(
             g, eps, walks_per_node, jax.random.PRNGKey(seed),
-            checkpoint_dir=checkpoint_dir, fail_at=fail_at, resume=resume)
+            checkpoint_dir=checkpoint_dir, fail_at=fail_at, resume=resume,
+            use_pallas=use_pallas or None)
         print(f"[pagerank] algo=counts n={g.n} shards={res.shards} "
               f"rounds={res.rounds} restarts={res.restarts} "
               f"lane_cap={res.lane_cap} "
               f"a2a_bytes={res.a2a_bytes_total} overflow={res.overflow}")
+        print(f"[pagerank] sampler: {res.sampler_us:.0f} us total "
+              f"({res.sampler_us / max(res.rounds, 1):.0f} us/round) "
+              f"bucket_occupancy={list(res.occupancy)} "
+              f"residual={res.residual}")
         pi = res.pi
     elif algo in ("improved", "directed"):
         engine = (distributed_improved_pagerank if algo == "improved"
@@ -191,6 +202,10 @@ def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
               f"{res.exhausted_walks} tail_walks={res.tail_walks}")
         print(f"[pagerank] wire by phase: {res.a2a_bytes_by_phase} "
               f"dropped={res.dropped} waited={res.waited}")
+        print(f"[pagerank] p1 sampler: {res.sampler_us:.0f} us total "
+              f"({res.sampler_us / max(res.phase1_rounds, 1):.0f} us/round)"
+              f" bucket_occupancy={list(res.p1_occupancy)} "
+              f"residual={res.residual}")
         if algo == "directed":
             print(f"[pagerank] uniform budget={res.uniform_budget} "
                   f"coupons/node dangling_nodes={res.dangling_nodes}")

@@ -38,11 +38,12 @@ def run_forced_devices(code: str, devices: int | None = None,
 # in-process fixture below is derived from the SAME string — the two can
 # not diverge.
 SMALL_GRAPHS_SRC = """
-from repro.graphs import (barabasi_albert, directed_web, erdos_renyi,
-                          grid2d, ring)
+from repro.graphs import (barabasi_albert, barabasi_albert_hub,
+                          directed_web, erdos_renyi, grid2d, ring)
 graphs = dict(ring=ring(64), grid=grid2d(8, 8),
               er=erdos_renyi(96, 5.0, seed=1),
               ba=barabasi_albert(96, 3, seed=2),
+              ba_hub=barabasi_albert_hub(96, 3, seed=4),
               dweb=directed_web(96, 5.0, seed=3))
 """
 

@@ -44,9 +44,10 @@ L1_TOL = 0.15
 MASS_TOL = 0.10
 TOPK_MIN = 0.6
 
-UNDIRECTED = ("ring", "grid", "er", "ba")
+UNDIRECTED = ("ring", "grid", "er", "ba", "ba_hub")
 ALL_GRAPHS = UNDIRECTED + ("dweb",)
-SKEWED = ("er", "ba", "dweb")  # fixtures where a top-10 ranking is meaningful
+SKEWED = ("er", "ba", "ba_hub", "dweb")  # fixtures where a top-10 ranking
+                                         # is meaningful
 
 
 def check_policy(name, pi, pi_ref):

@@ -212,6 +212,93 @@ def test_merge_walks_conserves_and_drops_exactly(kept, recv):
     _check_merge_walks(kept, recv)
 
 
+# ---------------------------------------------------------------------------
+# degree-bucketed aggregate sampler (core/aggregate_sampler): the static
+# layout machinery every count-moving engine now routes through.
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(min_value=0, max_value=200), min_size=1,
+                max_size=200))
+def test_bucket_permutation_is_a_bijection(degs):
+    """The bucket-grouping permutation hits every row exactly once; the
+    -1 entries are pure padding; every row lands in the bucket whose
+    width covers its degree."""
+    from repro.core.aggregate_sampler import bucket_of, build_layout
+    deg = np.asarray(degs, np.int32)
+    md = max(int(deg.max()), 1)
+    layout, perm = build_layout(deg, md)
+    real = perm[perm >= 0]
+    assert sorted(real.tolist()) == list(range(len(deg)))
+    assert (perm >= -1).all() and (perm < len(deg)).all()
+    starts = np.asarray(layout.row_starts)
+    b_of = bucket_of(deg)
+    for b, (start, cap, w) in enumerate(
+            zip(layout.row_starts, layout.caps, layout.widths)):
+        rows = perm[start:start + cap]
+        rows = rows[rows >= 0]
+        assert (b_of[rows] == b).all()
+        assert (deg[rows] <= w).all()        # chain covers the whole row
+
+
+@given(st.integers(min_value=1, max_value=5).flatmap(lambda s: st.tuples(
+           st.just(s),
+           st.lists(st.integers(min_value=0, max_value=60),
+                    min_size=s * 2, max_size=s * 8))))
+def test_bucketed_adjacency_roundtrips_flat_csr(case):
+    """The flat bucketed neighbor table is a pure re-layout: reading back
+    through the permutation reproduces each row's first deg slots of the
+    padded adjacency bit-exactly."""
+    from repro.core.aggregate_sampler import (build_layout_sharded,
+                                              bucketize_adjacency)
+    shards, degs = case
+    n_loc = len(degs) // shards
+    deg = np.asarray(degs[:n_loc * shards], np.int32).reshape(shards, n_loc)
+    md = max(int(deg.max()), 1)
+    rng = np.random.default_rng(0)
+    nbr = rng.integers(0, 1000, size=(shards, n_loc, md)).astype(np.int32)
+    for p in range(shards):
+        for r in range(n_loc):
+            nbr[p, r, deg[p, r]:] = 0          # padding slots
+    layout, perm = build_layout_sharded(deg, md)
+    flat = bucketize_adjacency(nbr, perm, layout)
+    assert flat.shape == (shards, layout.total_edges)
+    s_rows, s_edges = 0, 0
+    for cap, w in zip(layout.caps, layout.widths):
+        for p in range(shards):
+            for i in range(cap):
+                r = perm[p, s_rows + i]
+                blk = flat[p, s_edges + i * w: s_edges + (i + 1) * w]
+                if r < 0:
+                    np.testing.assert_array_equal(blk, 0)
+                else:
+                    d = deg[p, r]
+                    np.testing.assert_array_equal(blk[:d], nbr[p, r, :d])
+        s_rows += cap
+        s_edges += cap * w
+
+
+@given(st.integers(min_value=1, max_value=7),
+       st.integers(min_value=0, max_value=2**20),
+       st.integers(min_value=0, max_value=2**16))
+def test_residual_zero_at_bucket_boundary_degrees(k, count, seed):
+    """Conservation (residual == 0) exactly at the bucket-boundary
+    degrees d = 2^k (last row of bucket k) and d = 2^k + 1 (first row of
+    bucket k+1), where an off-by-one in widths would leak mass."""
+    from repro.core.aggregate_sampler import (build_layout, sample_buckets)
+    degs = np.asarray([2 ** k, 2 ** k + 1, 1, 0], np.int32)
+    md = int(degs.max())
+    layout, perm = build_layout(degs, md)
+    counts = jnp.asarray([count, count, seed % 97, 3], jnp.int32)
+    rid = jnp.arange(4, dtype=jnp.int32)
+    kw = jnp.asarray(np.array([seed, seed ^ 0xABCDEF], np.uint32))
+    samples, occ, residual = sample_buckets(
+        counts, jnp.asarray(degs), rid, kw, jnp.asarray(perm), layout,
+        eps=0.2, use_pallas=False)
+    assert int(residual) == 0
+    total = sum(int(T.sum()) for _, T in samples)
+    assert total == int(counts.sum())
+
+
 @given(st.integers(min_value=1, max_value=2**16))
 def test_pagerank_estimate_near_normalized(seed):
     """pi_tilde sums to ~1 (unbiased estimator of a distribution)."""

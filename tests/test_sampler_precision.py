@@ -1,0 +1,76 @@
+"""Regression tests for the aggregate sampler's integer exactness.
+
+The bug class (same as the PR-6 estimator fix, one layer down): the old
+per-round draws ran `jax.random.binomial(k, counts.astype(float32), p)`.
+float32 is integer-exact only up to 2**24, so a hub row whose aggregate
+coupon count passed ~16.7M silently truncated — coupons created or
+destroyed before the draw even happened. The shared sampler
+(`kernels/multinomial_rows`) keeps counts in int32 end to end: the
+Binomial endpoints p == 0 and p == 1 are computed in integer arithmetic
+and every chain draw is clipped to the integer remainder, so conservation
+(T.sum() == counts) holds bit-exactly at ANY count magnitude. Only the
+*marginal means* of the normal branch run through float32 (a ~1e-7
+relative statistical error, never a leak).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.multinomial_rows._math import key_words, sample_rows_math
+from repro.kernels.multinomial_rows.ref import multinomial_rows_ref
+
+KW = (np.uint32(0x12345678), np.uint32(0x9ABCDEF0))
+
+
+def _sample(counts, deg, *, eps=0.2, width=None):
+    counts = jnp.asarray(counts, jnp.int32)
+    deg = jnp.asarray(deg, jnp.int32)
+    width = width or max(int(deg.max()), 1)
+    rid = jnp.arange(counts.shape[0], dtype=jnp.int32)
+    return sample_rows_math(counts, deg, rid, KW[0], KW[1],
+                            eps=float(eps), width=width)
+
+
+def test_float32_would_truncate_but_sampler_conserves():
+    # the motivating rounding: 2**24 and 2**24 + 1 collide in float32 —
+    # the old astype(f32) draw path could not tell these rows apart
+    assert np.float32(2 ** 24) == np.float32(2 ** 24 + 1)
+    counts = [2 ** 24, 2 ** 24 + 1, 2 ** 30, 2 ** 31 - 1]
+    T = np.asarray(_sample(counts, [3, 3, 5, 2], width=8))
+    # bit-exact conservation per row, far beyond float32 integer range
+    np.testing.assert_array_equal(T.sum(axis=1), np.asarray(counts))
+    # and the two f32-colliding rows stay distinct in total
+    assert T[1].sum() - T[0].sum() == 1
+
+
+def test_endpoint_probabilities_are_integer_exact():
+    big = 2 ** 26 + 13
+    # eps = 1: every coupon terminates, none leak to edges
+    T1 = np.asarray(_sample([big], [4], eps=1.0, width=4))
+    assert T1[0, 0] == big and T1[0, 1:].sum() == 0
+    # deg = 1: the single out-edge draws p == 1 -> exactly the survivors
+    T2 = np.asarray(_sample([big], [1], eps=0.25, width=1))
+    assert T2[0, 0] + T2[0, 1] == big
+
+
+def test_dangling_rows_terminate_whole():
+    big = 2 ** 28 + 5
+    T = np.asarray(_sample([big, 7, 0], [0, 0, 0], width=3))
+    np.testing.assert_array_equal(T[:, 0], [big, 7, 0])
+    assert T[:, 1:].sum() == 0
+
+
+def test_ref_kernel_conserves_across_magnitudes():
+    rng = np.random.default_rng(0)
+    counts = np.concatenate([
+        rng.integers(0, 2000, size=64),
+        np.array([2 ** 24, 2 ** 24 + 1, 2 ** 27 + 3, 2 ** 30])],
+    ).astype(np.int32)
+    deg = rng.integers(0, 9, size=counts.shape[0]).astype(np.int32)
+    rid = np.arange(counts.shape[0], dtype=np.int32)
+    T = np.asarray(multinomial_rows_ref(
+        jnp.asarray(counts), jnp.asarray(deg), jnp.asarray(rid),
+        jnp.asarray(np.stack(KW)), eps=0.2, width=8))
+    np.testing.assert_array_equal(T.sum(axis=1), counts)
+    # nothing lands beyond a row's degree
+    for j in range(8):
+        assert np.all(T[deg <= j, 1 + j] == 0)
