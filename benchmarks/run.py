@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV per benchmark:
   bench_directed    — Theorem 3 directed/LOCAL variant
   bench_engines     — engine throughput (counts vs walk-array vs baseline)
   bench_distributed — multi-shard wire volume: walk-routing vs count lanes
+  bench_serve       — PPR query serving: Poisson traffic qps + latency
   bench_kernels     — Pallas kernel micro-benches + TPU roofline estimates
   roofline_report   — dry-run roofline aggregation (all cells)
 """
@@ -21,6 +22,7 @@ MODULES = [
     "benchmarks.bench_directed",
     "benchmarks.bench_engines",
     "benchmarks.bench_distributed",
+    "benchmarks.bench_serve",
     "benchmarks.bench_kernels",
     "benchmarks.roofline_report",
 ]

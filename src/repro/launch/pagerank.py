@@ -71,6 +71,24 @@ available on the returned `ImprovedDistResult`/`DirectedDistResult`):
                  occupancy (rows holding coupons, summed over rounds and
                  shards; bucket b covers degrees in (2^(b-1), 2^b]), and
                  the conservation residual (must be 0).
+
+`--algo ppr` runs the batched Personalized-PageRank engine
+(`repro.core.personalized_batch`): `--queries` seed-derived multi-source
+queries advance together, every superstep moving ALL queries' walks over
+one `route_counts` exchange (query ids folded into a virtual vertex
+space, so the wire stays Lemma-1 counts). Telemetry printed:
+  rounds         supersteps to drain every query's walks.
+  a2a_bytes      total all_to_all payload (8 B per routed (vertex-lane,
+                 count) entry, summed over rounds).
+  dropped / admit_dropped
+                 walk-buffer resp. admission overflow — both must be 0
+                 (the default cap is sized so overflow is impossible).
+  peak_active    peak concurrently-live walks across the run (from the
+                 per-round active trace).
+Accuracy is reported per query against the `exact_ppr` dense linear
+solve (NOT power iteration — PPR's stationary vector depends on the
+query's source distribution); `--check` gates on the same L1/top-10
+thresholds as the global-PageRank algos.
 """
 from __future__ import annotations
 
@@ -159,15 +177,67 @@ def run_walks(g, eps: float, walks_per_node: int, checkpoint_dir,
     return pi
 
 
+def run_ppr(g, eps: float, walks_per_query: int, num_queries: int,
+            seed: int, check: bool = False, use_pallas: bool = False,
+            l1_tol: float = 0.15, topk_min: float = 0.6):
+    """Batched PPR: seed-derived multi-source queries, one shared engine.
+
+    Validates each query against its OWN `exact_ppr` oracle — PPR has no
+    single power-iteration reference, so this path never reaches
+    `_report_accuracy`. Returns the [num_queries, n] estimator matrix.
+    """
+    from repro.core.personalized import exact_ppr
+    from repro.core.personalized_batch import batched_personalized_pagerank
+
+    rng = np.random.default_rng(seed)
+    queries = []
+    for _ in range(num_queries):
+        k = int(rng.integers(1, 4))
+        sources = rng.choice(g.n, size=k, replace=False)
+        queries.append((sources, None))
+    res = batched_personalized_pagerank(
+        g, eps, queries, walks_per_query, jax.random.PRNGKey(seed),
+        use_pallas=use_pallas or None)
+    peak = max(res.active_trace) if res.active_trace else 0
+    print(f"[pagerank] algo=ppr n={g.n} shards={res.shards} "
+          f"queries={num_queries} walks/query={walks_per_query} "
+          f"rounds={res.rounds} a2a_bytes={res.a2a_bytes} "
+          f"dropped={res.dropped} admit_dropped={res.admit_dropped} "
+          f"peak_active={peak}")
+    worst_l1, worst_topk = 0.0, 1.0
+    for i, (sources, weights) in enumerate(queries):
+        ref = exact_ppr(g, eps, sources, weights=weights)
+        est = res.ppr[i]
+        l1 = l1_error(normalized(est), normalized(ref))
+        topk = topk_overlap(est, ref)
+        print(f"[pagerank]   query {i} sources={list(map(int, sources))} "
+              f"L1 vs exact_ppr: {l1:.4f}  top-10 overlap: {topk:.2f}")
+        worst_l1, worst_topk = max(worst_l1, l1), min(worst_topk, topk)
+    if check and (worst_l1 >= l1_tol or worst_topk < topk_min
+                  or res.dropped or res.admit_dropped):
+        raise SystemExit(
+            f"[pagerank] ppr check FAILED: worst L1 {worst_l1:.4f} "
+            f"(tol {l1_tol}) worst top-10 {worst_topk:.2f} "
+            f"(min {topk_min}) dropped={res.dropped} "
+            f"admit_dropped={res.admit_dropped}")
+    return res.ppr
+
+
 def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
         checkpoint_dir: str | None, fail_at: list[int], seed: int = 0,
         algo: str = "walks", avg_deg: float = 6.0, resume: bool = False,
-        check: bool = False, use_pallas: bool = False):
+        check: bool = False, use_pallas: bool = False,
+        num_queries: int = 4):
     if resume and not checkpoint_dir:
         raise SystemExit("[pagerank] --resume needs --checkpoint-dir "
                          "(there is no snapshot to cold-start from)")
     g = GENERATORS[graph_kind](n, avg_deg, seed) if graph_kind != "ring" \
         else GENERATORS[graph_kind](n)
+    if algo == "ppr":
+        # PPR validates per-query vs exact_ppr inside run_ppr; the
+        # power-iteration report below does not apply to it
+        return run_ppr(g, eps, walks_per_node * g.n, num_queries, seed,
+                       check=check, use_pallas=use_pallas)
     if algo == "walks":
         pi = run_walks(g, eps, walks_per_node, checkpoint_dir, fail_at,
                        seed, resume=resume, use_pallas=use_pallas)
@@ -228,7 +298,12 @@ def main():
     ap.add_argument("--graph", default="erdos_renyi",
                     choices=sorted(GENERATORS))
     ap.add_argument("--algo", default="walks",
-                    choices=["walks", "counts", "improved", "directed"])
+                    choices=["walks", "counts", "improved", "directed",
+                             "ppr"])
+    ap.add_argument("--queries", type=int, default=4,
+                    help="(--algo ppr) number of seed-derived multi-"
+                         "source queries batched into one engine; each "
+                         "query gets --walks * n walks")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
     ap.add_argument("--resume", action="store_true",
@@ -244,7 +319,8 @@ def main():
     args = ap.parse_args()
     run(args.n, args.eps, args.walks, args.graph, args.checkpoint_dir,
         args.fail_at, seed=args.seed, algo=args.algo, avg_deg=args.avg_deg,
-        resume=args.resume, check=args.check, use_pallas=args.use_pallas)
+        resume=args.resume, check=args.check, use_pallas=args.use_pallas,
+        num_queries=args.queries)
 
 
 if __name__ == "__main__":

@@ -1,3 +1,7 @@
 from repro.serve.batching import ContinuousBatcher, Request, ServeStats
+from repro.serve.ppr_service import (PPRRequest, PPRServeStats, PPRService,
+                                     ResultCache, query_cache_key)
 
-__all__ = ["ContinuousBatcher", "Request", "ServeStats"]
+__all__ = ["ContinuousBatcher", "Request", "ServeStats",
+           "PPRRequest", "PPRServeStats", "PPRService", "ResultCache",
+           "query_cache_key"]

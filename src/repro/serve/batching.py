@@ -12,6 +12,13 @@ cache; admission writes a fresh prefill cache into the slot (tree-indexed
 dynamic updates); completed slots are freed when EOS or the token budget
 hits. Batch-1 prefill per admission keeps the compiled-step count at two
 (one prefill, one decode) regardless of traffic.
+
+Accounting is EXACT: the completion check runs after every token append —
+the prefill-argmax token at admission included — so a request emits
+precisely max_new_tokens tokens (a max_new_tokens=1 request completes at
+admission and never holds a decode slot), `stats.tokens_out` counts every
+emitted token, and `stats.steps`/`stats.max_active` reflect only decode
+batches that actually ran.
 """
 from __future__ import annotations
 
@@ -79,51 +86,75 @@ class ContinuousBatcher:
         tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
         self.last_token = self.last_token.at[slot, 0].set(tok)
 
+    def _finished(self, req: Request, tok: int) -> bool:
+        """Token-budget / EOS completion check — applied after EVERY
+        append (admission included), so a request emits exactly
+        max_new_tokens tokens and never holds a slot past its budget."""
+        return (len(req.generated) >= req.max_new_tokens or
+                (self.eos_id is not None and tok == self.eos_id))
+
     def submit(self, req: Request) -> bool:
         for s in range(self.slots):
             if self.active[s] is None:
                 logits, pre_cache = self._prefill(
                     self.params, jnp.asarray(req.prompt[None, :]))
+                tok = int(jnp.argmax(logits[0, -1]))
+                req.generated.append(tok)
+                self.stats.prefills += 1
+                self.stats.tokens_out += 1
+                if self._finished(req, tok):
+                    # satisfied by the prefill token alone: completed at
+                    # admission, never occupies a decode slot
+                    req.done = True
+                    self.stats.completed += 1
+                    return True
                 self._write_slot(s, pre_cache, logits)
                 self.active[s] = req
-                req.generated.append(int(jnp.argmax(logits[0, -1])))
-                self.stats.prefills += 1
                 return True
         return False
 
     # ------------------------------------------------------------- stepping
-    def step(self):
-        if not any(r is not None for r in self.active):
-            return
+    def step(self) -> bool:
+        """One decode step over every active slot. Returns False (and
+        records nothing) when no slot is active — an empty batch does no
+        work and must not count as a step."""
+        n_active = sum(r is not None for r in self.active)
+        if n_active == 0:
+            return False
+        self.stats.max_active = max(self.stats.max_active, n_active)
         logits, self.cache = self._decode(self.params, self.cache,
                                           self.last_token)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         self.last_token = next_tok[:, None]
         self.stats.steps += 1
-        self.stats.max_active = max(
-            self.stats.max_active,
-            sum(r is not None for r in self.active))
         for s, req in enumerate(self.active):
             if req is None:
                 continue
             tok = int(next_tok[s])
             req.generated.append(tok)
             self.stats.tokens_out += 1
-            if (len(req.generated) >= req.max_new_tokens or
-                    (self.eos_id is not None and tok == self.eos_id)):
+            if self._finished(req, tok):
                 req.done = True
                 self.active[s] = None
                 self.stats.completed += 1
+        return True
 
     # ------------------------------------------------------------- driver
     def run(self, requests: List[Request], max_steps: int = 10_000
             ) -> ServeStats:
         pending = list(requests)
         steps = 0
-        while (pending or any(r is not None for r in self.active)) \
-                and steps < max_steps:
+        while pending or any(r is not None for r in self.active):
+            progress = False
             while pending and self.submit(pending[0]):
                 pending.pop(0)
-            self.step()
-            steps += 1
+                progress = True
+            if self.step():
+                # only decodes that ran count against the step budget
+                steps += 1
+                progress = True
+                if steps >= max_steps:
+                    break
+            if not progress:
+                break
         return self.stats

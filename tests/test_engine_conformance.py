@@ -14,7 +14,11 @@ small-graph fixtures under ONE tolerance policy:
 Each engine runs on the fixtures its model covers: the Algorithm-1 and
 Section-5 engines are direction-agnostic and take every fixture; the
 Algorithm-2 engines require the undirected Lemma-2 degree bound, so they
-take the undirected ones. The distributed half runs in one subprocess
+take the undirected ones. The batched Personalized-PageRank engine is
+validated per query against the `exact_ppr` dense linear solve (PPR has
+no single power-iteration reference — the stationary vector depends on
+each query's source distribution) under the SAME L1/mass/top-10
+thresholds. The distributed half runs in one subprocess
 (device count is process-global) honoring REPRO_TEST_DEVICES (default 8,
 CI also runs 1 to cover the single-shard fallback paths); it additionally
 checks the sharded Section-5 engine against its single-device twin
@@ -92,6 +96,34 @@ def test_single_device_conformance(engine, graph, small_graphs, pi_refs):
     seed = zlib.crc32(f"{engine}-{graph}".encode())  # deterministic per cell
     pi = run(small_graphs[graph], jax.random.PRNGKey(seed))
     check_policy((engine, graph), pi, pi_refs[graph])
+
+
+# ---------------------------------------------------------------------------
+# batched PPR engine (in-process, runs on however many devices the CI leg
+# forces) — per-query cells against the exact_ppr dense solve
+# ---------------------------------------------------------------------------
+
+PPR_QUERIES = [([0, 5], None), ([17], None), ([3, 40], [0.8, 0.2])]
+PPR_WALKS = 12_000  # per query; l1 ~ 1/sqrt(n*W) leaves ~4x headroom
+
+
+@pytest.fixture(scope="module")
+def batched_ppr(small_graphs):
+    from repro.core.personalized_batch import batched_personalized_pagerank
+    return batched_personalized_pagerank(
+        small_graphs["ba"], EPS, PPR_QUERIES, PPR_WALKS,
+        jax.random.PRNGKey(21))
+
+
+@pytest.mark.parametrize("qi", range(len(PPR_QUERIES)),
+                         ids=[f"q{i}" for i in range(len(PPR_QUERIES))])
+def test_batched_ppr_conformance(qi, small_graphs, batched_ppr):
+    from repro.core.personalized import exact_ppr
+    assert batched_ppr.dropped == 0 and batched_ppr.admit_dropped == 0
+    sources, weights = PPR_QUERIES[qi]
+    ref = normalized(exact_ppr(small_graphs["ba"], EPS, sources,
+                               weights=weights))
+    check_policy((f"batched_ppr_q{qi}", "ba"), batched_ppr.ppr[qi], ref)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,121 @@
+"""PPR query service: continuous-batching admission, cache, refresh.
+
+Time is injected everywhere (`now=`) so TTL/refresh behavior is tested
+against a controlled clock; accuracy itself is gated by the conformance
+suite (tests/test_engine_conformance.py) — here one loose sanity check
+keeps the served vectors anchored to the exact_ppr oracle.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import l1_error, normalized
+from repro.core.personalized import exact_ppr
+from repro.serve import PPRService, ResultCache
+from repro.graphs import barabasi_albert
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return barabasi_albert(48, 3, seed=3)
+
+
+def make_service(graph, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("walks_per_query", 800)
+    kw.setdefault("eps", 0.3)
+    return PPRService(graph, kw.pop("eps"), key=jax.random.PRNGKey(5), **kw)
+
+
+def drive(svc, now):
+    done = []
+    while svc.busy:
+        done.extend(svc.step(now=now))
+    return done
+
+
+def test_serves_batched_queries_and_caches(graph):
+    svc = make_service(graph)
+    r1 = svc.submit([0, 5], now=0.0)
+    r2 = svc.submit([7], now=0.0)
+    r3 = svc.submit([11, 2], now=0.0)   # queued: only 2 slots
+    done = drive(svc, now=1.0)
+    assert {r.rid for r in done} == {r1.rid, r2.rid, r3.rid}
+    assert all(r.done and r.result is not None for r in (r1, r2, r3))
+    assert svc.stats.admitted == 3 and svc.stats.completed == 3
+    assert svc.stats.max_active_queries == 2          # batched, slot-bound
+    assert svc.stats.dropped_walks == 0
+    assert svc.stats.admit_dropped == 0
+    # loose oracle anchor (tight gate lives in the conformance suite)
+    ref = exact_ppr(graph, 0.3, [0, 5])
+    assert l1_error(normalized(r1.result), normalized(ref)) < 0.3
+
+    # cache hit: answered at submit time, bit-identical stored vector
+    r4 = svc.submit([0, 5], now=2.0)
+    assert r4.cached and r4.done
+    assert np.array_equal(r4.result, r1.result)
+    assert svc.stats.cache_hits == 1
+    assert svc.stats.admitted == 3                    # no recompute
+    assert not svc.busy
+
+
+def test_ttl_expiry_forces_recompute(graph):
+    svc = make_service(graph, ttl=10.0)
+    svc.submit([1, 3], now=0.0)
+    drive(svc, now=0.5)
+    assert svc.stats.admitted == 1
+    # inside ttl: hit; beyond ttl: evicted -> recompute
+    assert svc.submit([1, 3], now=5.0).cached
+    r = svc.submit([1, 3], now=50.0)
+    assert not r.cached
+    drive(svc, now=51.0)
+    assert svc.stats.admitted == 2
+    assert r.done and r.result is not None
+
+
+def test_hot_source_refresh_serves_stale_and_recomputes(graph):
+    svc = make_service(graph, ttl=100.0, refresh_age=5.0)
+    first = svc.submit([2], now=0.0)
+    drive(svc, now=0.5)
+    stored_v1 = svc.cache.stored_at((first.sources, first.weights))
+
+    hit = svc.submit([2], now=7.0)      # older than refresh_age: hot
+    assert hit.cached                    # served stale, never blocked
+    assert np.array_equal(hit.result, first.result)
+    assert svc.stats.refreshes == 1
+    assert svc.busy                      # the background refresh is queued
+
+    # a second hot hit while a refresh is in flight does not pile up
+    assert svc.submit([2], now=7.5).cached
+    assert svc.stats.refreshes == 1
+
+    done = drive(svc, now=8.0)
+    assert len(done) == 1 and done[0].refresh
+    assert svc.cache.stored_at((first.sources, first.weights)) > stored_v1
+    # the refreshed entry now serves hits
+    assert np.array_equal(svc.submit([2], now=9.0).result, done[0].result)
+
+
+def test_max_pending_rejects_not_drops(graph):
+    svc = make_service(graph, slots=1, max_pending=1)
+    svc.submit([4], now=0.0)
+    svc.submit([6], now=0.0)
+    r = svc.submit([8], now=0.0)        # queue full
+    assert r.rejected and r.done and r.result is None
+    assert svc.stats.rejected == 1
+    drive(svc, now=1.0)
+    assert svc.stats.completed == 2      # the accepted ones still finish
+
+
+def test_result_cache_lru_and_ttl_clock():
+    c = ResultCache(max_entries=2, ttl=10.0, refresh_age=4.0)
+    a, b, d = (np.array([1.0]), np.array([2.0]), np.array([3.0]))
+    c.put("a", a, now=0.0)
+    c.put("b", b, now=1.0)
+    assert c.get("a", now=2.0) == (a, False)
+    c.put("d", d, now=3.0)               # evicts LRU = "b"
+    assert c.get("b", now=3.0) == (None, False)
+    v, refresh = c.get("a", now=5.0)     # age 5 >= refresh_age
+    assert v is a and refresh
+    assert c.get("a", now=11.0) == (None, False)   # age >= ttl: evicted
+    assert len(c) == 1

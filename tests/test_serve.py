@@ -88,4 +88,52 @@ def test_continuous_batching_matches_isolated(key):
                               max_seq=64).run(reqs)
     assert stats.completed == 3
     for r, p in zip(reqs, prompts):
-        assert r.generated[:5] == greedy_ref(p, 5), r.rid
+        assert len(r.generated) == 5, r.rid      # exactly the budget
+        assert r.generated == greedy_ref(p, 5), r.rid
+
+
+def test_batcher_exact_token_accounting(key):
+    """Every request emits exactly max_new_tokens tokens (completion is
+    checked after every append, admission included) and the counters
+    reflect only work actually done."""
+    cfg = reduced_config("qwen3-32b")
+    model = get_model(cfg)
+    params, _ = model.init_params(cfg, key)
+    rng = np.random.default_rng(1)
+    budgets = [1, 3, 2, 1]
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=4 + i).astype(np.int32),
+                    max_new_tokens=m)
+            for i, m in enumerate(budgets)]
+    b = ContinuousBatcher(model, params, cfg, slots=2, max_seq=64)
+    stats = b.run(reqs)
+    for r in reqs:
+        assert len(r.generated) == r.max_new_tokens, r.rid
+        assert r.done
+    assert stats.completed == len(reqs)
+    assert stats.prefills == len(reqs)
+    assert stats.tokens_out == sum(budgets)
+    # decode steps only generate the post-prefill tokens; with 2 slots the
+    # longest chain (3 tokens -> 2 decodes) bounds the step count, and the
+    # two max_new_tokens=1 requests never occupy a decode slot
+    assert stats.steps == 2
+    assert stats.max_active <= 2
+
+
+def test_batcher_mnt1_completes_at_admission(key):
+    """A max_new_tokens=1 request is satisfied by the prefill-argmax token:
+    no decode step runs at all and no slot is ever held."""
+    cfg = reduced_config("qwen3-32b")
+    model = get_model(cfg)
+    params, _ = model.init_params(cfg, key)
+    req = Request(rid=0, prompt=np.arange(6, dtype=np.int32),
+                  max_new_tokens=1)
+    b = ContinuousBatcher(model, params, cfg, slots=1, max_seq=64)
+    stats = b.run([req])
+    assert req.done and len(req.generated) == 1
+    assert stats.steps == 0
+    assert stats.tokens_out == 1
+    assert stats.max_active == 0
+    assert stats.completed == 1
+    assert all(r is None for r in b.active)
