@@ -1,6 +1,9 @@
 from repro.checkpoint.checkpointer import (Checkpointer, pack_json,
                                            restore_into, unpack_json)
-from repro.checkpoint.elastic import relayout_pagerank_state
+from repro.checkpoint.elastic import (LayoutSpec, derive_shard_keys,
+                                      relayout_arrays, relayout_pagerank_state,
+                                      relayout_staged_flat)
 
-__all__ = ["Checkpointer", "pack_json", "restore_into", "unpack_json",
-           "relayout_pagerank_state"]
+__all__ = ["Checkpointer", "LayoutSpec", "derive_shard_keys", "pack_json",
+           "relayout_arrays", "relayout_pagerank_state",
+           "relayout_staged_flat", "restore_into", "unpack_json"]

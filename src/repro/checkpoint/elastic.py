@@ -4,51 +4,296 @@ Training state: checkpoints hold full (host-gathered) arrays, so re-layout
 is a `device_put` with the new mesh's NamedSharding — handled by
 `checkpointer.restore_into`.
 
-PageRank engine state is mesh-shaped ([P, cap] walk buffers, [P, n_loc]
-visit shards), so resizing P requires real repartitioning — implemented
-here: walks are re-bucketed by their new owner shard, visit counters are
-re-split along the vertex axis. Exactness: the multiset of live walks and
-the per-vertex zeta are preserved bit-for-bit.
+PageRank engine state is mesh-shaped, so resizing the shard count P is a
+real repartitioning problem. Every engine buffer is one of a small set of
+LAYOUT KINDS, declared per stage by the engine as a `LayoutSpec` schema on
+its `runtime.StagedState` (see `StagedState.layouts`); `relayout_arrays`
+is the schema-driven repartitioner the `runtime.Supervisor` routes a
+resumed snapshot through when the manifest's recorded mesh shape differs
+from the live mesh:
+
+  ``walk``            [P, cap] lanes of global vertex ids (-1 = empty).
+                      Live walks are re-bucketed by their new owner shard
+                      (owner(v) = v // n_loc'), packed in sorted order so
+                      the layout is CANONICAL — relayout P -> P' -> P is
+                      bit-exact. Walks are anonymous (Lemma 1), so the
+                      re-ordering is semantically free. The per-shard cap
+                      auto-grows past the heuristic/target whenever walk
+                      skew demands it: an elastic resume never fails
+                      because one shard attracted too many walks.
+  ``walk_aux``        a companion lane of a ``walk`` buffer (e.g. the
+                      query-id lane of the batched PPR engine); it follows
+                      the primary's placement exactly. Declared via the
+                      primary's ``aux=(name, ...)``.
+  ``vertex``          [P, n_loc, *rest] vertex-sharded values (zeta, walk
+                      counts, ...). Re-split along the contiguous vertex
+                      partition: flatten, truncate the old padding at n,
+                      re-pad, re-split. Bit-exact both ways.
+  ``slot``            [P, S_loc_pad, *rest] coupon-pool-slot-indexed
+                      buffers of the 3-phase engines (pos/alive/traj/used/
+                      dest/cterm). The pool layout is a pure function of
+                      the per-vertex pool sizes (``pool``) and P — vertex
+                      v's coupons occupy contiguous slots at
+                      pstart[owner(v), v_loc] — so coupon (v, j) has a
+                      deterministic slot under EVERY mesh size and the
+                      re-layout is a bit-exact bijection.
+  ``key``             [P, 2] per-shard PRNG keys. New keys are derived by
+                      `fold_in(PRNGKey(hash(old keys)), shard)` — see
+                      `derive_shard_keys`. One-way: the resumed trajectory
+                      is fresh (statistically identical), not a replay.
+  ``replicated_key``  [P, 2] where every shard carries the SAME key (the
+                      count-state engine's layout-independent RNG): row 0
+                      is tiled to the new P, so the per-vertex
+                      counter-based draws continue bit-exactly on any
+                      mesh size.
+  ``replicated``      replicated scalars/arrays (round counters, drop
+                      counters) — unchanged.
+
+`relayout_pagerank_state` (the original walk-engine entry point) is kept
+as a thin wrapper over the same schema machinery.
+
+Exactness contract: ``vertex``/``slot``/``replicated``/``replicated_key``
+buffers round-trip P -> P' -> P bit-exactly, and canonical ``walk`` lanes
+do too; per-shard ``key`` streams are re-derived (collision-resistant via
+a hash of the full old key array), so engines whose RNG is keyed per
+shard resume with a fresh — tolerance-gated, not bit-exact — trajectory,
+while engines with counter-based per-vertex RNG (`distributed_counts`)
+resume bit-exactly on any mesh size.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import math
-from typing import Dict
+from typing import Dict, Optional, Sequence, Tuple
 
+import jax
 import numpy as np
 
+from repro.checkpoint.checkpointer import unpack_json
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutSpec:
+    """Declares how one engine buffer is laid out across the mesh.
+
+    kind  one of walk | walk_aux | vertex | slot | key | replicated_key |
+          replicated (see module docstring).
+    n     number of real vertices (walk/vertex/slot kinds).
+    pool  per-real-vertex coupon pool sizes, length n (slot kind).
+    cap   target per-shard lane capacity (walk kind). The engine passes
+          the capacity its compiled programs expect; relayout grows past
+          it only when the walks of one shard do not fit (never shrinks
+          a declared target, never fails on skew).
+    fill  empty-slot filler for walk/walk_aux/slot kinds.
+    aux   names of walk_aux buffers that follow this walk buffer's
+          placement (walk kind only).
+    """
+
+    kind: str
+    n: Optional[int] = None
+    pool: Optional[np.ndarray] = None
+    cap: Optional[int] = None
+    fill: int = 0
+    aux: Tuple[str, ...] = ()
+
+
+def derive_shard_keys(old_keys: np.ndarray, new_shards: int) -> np.ndarray:
+    """Fresh independent per-shard keys from an old per-shard key array.
+
+    The old [P, 2] uint32 array is hashed WHOLE (blake2b over its bytes +
+    length), the 63-bit digest seeds a base PRNGKey, and shard p's key is
+    `fold_in(base, p)`. Unlike the previous XOR-reduce (which collapsed
+    every layout to a single 31-bit seed, so distinct old layouts could
+    alias to identical new streams), the full-array hash separates any
+    two different old key sets — including permutations of the same rows,
+    which XOR could not tell apart.
+    """
+    data = np.ascontiguousarray(np.asarray(old_keys, dtype=np.uint32))
+    h = hashlib.blake2b(data.tobytes() + np.int64(data.size).tobytes(),
+                        digest_size=8).digest()
+    seed = int.from_bytes(h, "little") & (2 ** 63 - 1)
+    base = jax.random.PRNGKey(seed)
+    return np.stack([np.asarray(jax.random.fold_in(base, p))
+                     for p in range(int(new_shards))])
+
+
+def _relayout_vertex(arr: np.ndarray, n: int, new_shards: int) -> np.ndarray:
+    """Re-split a [P, n_loc, *rest] vertex-sharded buffer (bit-exact)."""
+    old_shards, n_loc_old = arr.shape[:2]
+    rest = arr.shape[2:]
+    flat = arr.reshape((old_shards * n_loc_old,) + rest)[:n]
+    n_loc = math.ceil(n / new_shards)
+    out = np.zeros((n_loc * new_shards,) + rest, dtype=arr.dtype)
+    out[:n] = flat
+    return out.reshape((new_shards, n_loc) + rest)
+
+
+def _slot_index(pool: np.ndarray, n: int, shards: int):
+    """Flat slot index of every real coupon under a P-shard pool layout.
+
+    Returns (flat_idx [S_total], S_loc_pad): coupon (v, j) — the j-th
+    coupon of vertex v, enumerated vertex-major — lives at flat slot
+    owner(v) * S_loc_pad + pstart[owner(v), v_loc] + j. This mirrors the
+    placement `_run_three_phase` builds, for ANY shard count.
+    """
+    n_loc = math.ceil(n / shards)
+    n_pad = n_loc * shards
+    pool_pad = np.zeros(n_pad, dtype=np.int64)
+    pool_pad[:n] = np.asarray(pool, dtype=np.int64)[:n]
+    psize = pool_pad.reshape(shards, n_loc)
+    pstart = np.zeros_like(psize)
+    pstart[:, 1:] = np.cumsum(psize, axis=1)[:, :-1]
+    S_loc_pad = max(int(psize.sum(axis=1).max()), 1)
+    v = np.repeat(np.arange(n_pad), pool_pad)
+    starts = np.concatenate([[0], np.cumsum(pool_pad)[:-1]])
+    within = np.arange(len(v), dtype=np.int64) - np.repeat(starts, pool_pad)
+    flat = (v // n_loc) * S_loc_pad + pstart.reshape(-1)[v] + within
+    return flat, S_loc_pad
+
+
+def _relayout_slot(arr: np.ndarray, spec: LayoutSpec, old_shards: int,
+                   new_shards: int) -> np.ndarray:
+    """Re-home a coupon-slot-indexed buffer (bit-exact bijection)."""
+    old_idx, S_old = _slot_index(spec.pool, spec.n, old_shards)
+    new_idx, S_new = _slot_index(spec.pool, spec.n, new_shards)
+    if arr.shape[:2] != (old_shards, S_old):
+        raise ValueError(
+            f"slot buffer shape {arr.shape[:2]} does not match the "
+            f"{old_shards}-shard pool layout {(old_shards, S_old)}")
+    rest = arr.shape[2:]
+    flat = arr.reshape((old_shards * S_old,) + rest)
+    out = np.full((new_shards * S_new,) + rest, spec.fill, dtype=arr.dtype)
+    out[new_idx] = flat[old_idx]
+    return out.reshape((new_shards, S_new) + rest)
+
+
+def _relayout_walk(primary: np.ndarray, auxes: Dict[str, np.ndarray],
+                   aux_fills: Dict[str, int], spec: LayoutSpec,
+                   new_shards: int) -> Dict[str, np.ndarray]:
+    """Re-bucket walk lanes by new owner, canonical sorted packing.
+
+    The per-shard cap starts from the declared target (or the old
+    heuristic) and AUTO-GROWS to the most loaded shard — skewed walks can
+    never overflow an elastic resume (the old code raised ValueError
+    here). Aux lanes follow the primary's placement slot for slot.
+    """
+    old_shards, old_cap = primary.shape
+    n_loc = math.ceil(spec.n / new_shards)
+    flat = primary.reshape(-1)
+    live = flat >= 0
+    vals = flat[live]
+    aux_vals = {k: a.reshape(-1)[live] for k, a in auxes.items()}
+    # canonical order: by vertex, then by the aux lanes, then stable
+    keys = tuple(aux_vals[k] for k in reversed(sorted(aux_vals))) + (vals,)
+    order = np.lexsort(keys)
+    vals = vals[order]
+    aux_vals = {k: a[order] for k, a in aux_vals.items()}
+
+    owner = np.minimum(vals // n_loc, new_shards - 1).astype(np.int64)
+    counts = np.bincount(owner, minlength=new_shards)
+    cap = spec.cap if spec.cap is not None else max(
+        old_cap * old_shards // new_shards + new_shards * 64, 256)
+    cap = max(int(cap), int(counts.max(initial=0)), 1)
+
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot = np.arange(len(vals), dtype=np.int64) - starts[owner]
+    out = {}
+    new_p = np.full((new_shards, cap), spec.fill, dtype=primary.dtype)
+    new_p[owner, slot] = vals
+    out["__primary__"] = new_p
+    for k, a in aux_vals.items():
+        buf = np.full((new_shards, cap), aux_fills[k], dtype=auxes[k].dtype)
+        buf[owner, slot] = a
+        out[k] = buf
+    return out
+
+
+def relayout_arrays(arrays: Dict[str, np.ndarray],
+                    specs: Dict[str, "LayoutSpec"],
+                    old_shards: int, new_shards: int) -> Dict[str, np.ndarray]:
+    """Schema-driven re-layout of one stage's host buffers to a new P.
+
+    Every buffer in `arrays` must have a `LayoutSpec` in `specs`
+    (walk_aux buffers are produced while their primary is processed).
+    Returns a new dict shaped for `new_shards`; `old_shards == new_shards`
+    is the identity for every kind except `key` (which still re-derives —
+    callers skip relayout entirely on a same-size mesh).
+    """
+    missing = [k for k in arrays if k not in specs]
+    if missing:
+        raise ValueError(f"no layout schema for buffer(s) {missing}; "
+                         f"schema covers {sorted(specs)}")
+    out: Dict[str, np.ndarray] = {}
+    for name, arr in arrays.items():
+        spec = specs[name]
+        arr = np.asarray(arr)
+        if spec.kind == "walk":
+            auxes = {a: np.asarray(arrays[a]) for a in spec.aux}
+            fills = {a: specs[a].fill for a in spec.aux}
+            got = _relayout_walk(arr, auxes, fills, spec, new_shards)
+            out[name] = got.pop("__primary__")
+            out.update(got)
+        elif spec.kind == "walk_aux":
+            continue                      # handled with its primary
+        elif spec.kind == "vertex":
+            out[name] = _relayout_vertex(arr, spec.n, new_shards)
+        elif spec.kind == "slot":
+            out[name] = _relayout_slot(arr, spec, old_shards, new_shards)
+        elif spec.kind == "key":
+            out[name] = derive_shard_keys(arr, new_shards)
+        elif spec.kind == "replicated_key":
+            out[name] = np.tile(np.asarray(arr)[:1], (new_shards, 1))
+        elif spec.kind == "replicated":
+            out[name] = arr
+        else:
+            raise ValueError(f"unknown layout kind {spec.kind!r} "
+                             f"for buffer {name!r}")
+    return out
+
+
+def relayout_staged_flat(flat: Dict[str, np.ndarray], old_shards: int,
+                         new_shards: int,
+                         layouts: Dict[str, Dict[str, "LayoutSpec"]]
+                         ) -> Dict[str, np.ndarray]:
+    """Re-layout a flat `StagedState` snapshot (as written by
+    `runtime.staged_to_host` through the `Checkpointer`) onto a new mesh
+    size, using the schema of the stage the snapshot is tagged with."""
+    stage = unpack_json(flat["stage"])
+    specs = layouts.get(stage)
+    if specs is None:
+        raise ValueError(f"no layout schema declared for stage {stage!r}; "
+                         f"schemas cover stages {sorted(layouts)}")
+    arrays = {k.split("/", 1)[1]: v for k, v in flat.items()
+              if k.startswith("arrays/")}
+    relaid = relayout_arrays(arrays, specs, old_shards, new_shards)
+    out = {f"arrays/{k}": v for k, v in relaid.items()}
+    for k in flat:
+        if not k.startswith("arrays/"):
+            out[k] = flat[k]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# walk-engine entry point (kept for the Algorithm-1 walk-state engine)
+# ---------------------------------------------------------------------------
 
 def relayout_pagerank_state(host_state: Dict, n: int, new_shards: int,
                             cap: int | None = None) -> Dict:
-    pos = np.asarray(host_state["pos"])        # [P_old, cap_old]
-    zeta = np.asarray(host_state["zeta"])      # [P_old, n_loc_old]
-    old_shards, old_cap = pos.shape
-    live = pos[pos >= 0]
-
-    n_loc = math.ceil(n / new_shards)
-    n_pad = n_loc * new_shards
-    if cap is None:
-        cap = max(old_cap * old_shards // new_shards + new_shards * 64, 256)
-
-    new_pos = np.full((new_shards, cap), -1, dtype=np.int32)
-    for p in range(new_shards):
-        mine = live[(live // n_loc) == p]
-        if len(mine) > cap:
-            raise ValueError(f"elastic relayout overflow on shard {p}: "
-                             f"{len(mine)} walks > cap {cap}")
-        new_pos[p, : len(mine)] = mine
-
-    zeta_flat = zeta.reshape(-1)[:n]
-    zeta_pad = np.concatenate([zeta_flat,
-                               np.zeros(n_pad - n, dtype=zeta_flat.dtype)])
-    new_zeta = zeta_pad.reshape(new_shards, n_loc)
-
-    # fresh independent per-shard keys derived from the old ones
-    old_keys = np.asarray(host_state["key"]).reshape(-1)
-    seed = int(np.bitwise_xor.reduce(old_keys.astype(np.uint32))) & 0x7FFFFFFF
-    import jax
-    new_keys = np.asarray(jax.random.split(jax.random.PRNGKey(seed), new_shards))
-
-    return dict(pos=new_pos, zeta=new_zeta, key=new_keys,
-                round=host_state["round"], dropped=host_state["dropped"],
-                waited=host_state["waited"])
+    """Re-layout the Algorithm-1 walk engine's `DistState` host dict
+    ([P, cap] walk lanes + [P, n_loc] visit shard + per-shard keys) onto
+    `new_shards`. The multiset of live walks and the per-vertex zeta are
+    preserved bit-for-bit; the cap auto-grows under walk skew (an elastic
+    resume never fails because one shard holds too many walks); keys are
+    re-derived via `derive_shard_keys`."""
+    specs = dict(
+        pos=LayoutSpec(kind="walk", n=n, cap=cap, fill=-1),
+        zeta=LayoutSpec(kind="vertex", n=n),
+        key=LayoutSpec(kind="key"),
+        round=LayoutSpec(kind="replicated"),
+        dropped=LayoutSpec(kind="replicated"),
+        waited=LayoutSpec(kind="replicated"),
+    )
+    arrays = {k: np.asarray(v) for k, v in host_state.items()}
+    old_shards = arrays["pos"].shape[0]
+    return relayout_arrays(arrays, specs, old_shards, new_shards)

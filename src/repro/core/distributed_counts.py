@@ -55,6 +55,7 @@ from repro.core.distributed import AXIS, shard_map
 from repro.core.estimator import pagerank_from_visits
 from repro.core.graph import CSRGraph
 from repro.core.routing import lane_slots
+from repro.checkpoint import LayoutSpec
 from repro.kernels import resolve_use_pallas
 from repro.kernels.multinomial_rows._math import key_words
 from repro.runtime import Stage, StagedState, StageSchedule, run_staged
@@ -321,7 +322,15 @@ def distributed_pagerank_counts(graph: CSRGraph, eps: float,
     injected failure replays the identical trajectory (state includes the
     PRNG keys), so the recovered run is bit-exact. `bucketed=False` keeps
     the single-bucket max_deg-wide sampler layout (pre-bucketing shape,
-    for benchmarking); the draws themselves are layout-independent."""
+    for benchmarking); the draws themselves are layout-independent.
+
+    Snapshots are mesh-size-agnostic: the round key is REPLICATED across
+    shards (every shard advances the same stream; draws are distinguished
+    purely by the counter-based global vertex id, which is mesh-size
+    independent), and the state declares its layout schema, so
+    `resume=True` onto a mesh with a different device count re-layouts
+    the snapshot and continues BIT-EXACTLY — same zeta/pi as the
+    uninterrupted run at the original shard count."""
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), (AXIS,))
     use_pallas = resolve_use_pallas(use_pallas)
@@ -331,7 +340,10 @@ def distributed_pagerank_counts(graph: CSRGraph, eps: float,
 
     counts0 = np.zeros((shards, sg.n_loc), np.int32)
     counts0.reshape(-1)[: graph.n] = walks_per_node
-    keys = jax.random.split(key, shards)
+    # REPLICATED round key: every shard splits the same stream, draws are
+    # distinguished only by the counter-based global vertex id — so the
+    # trajectory is a pure function of (seed, graph), not the mesh size
+    keys = jnp.tile(jnp.asarray(key)[None], (shards, 1))
     deg = jax.device_put(sg.deg, spec)
     bperm = jax.device_put(sg.bperm, spec)
     bnbr = jax.device_put(sg.bnbr, spec)
@@ -371,7 +383,13 @@ def distributed_pagerank_counts(graph: CSRGraph, eps: float,
                     key=jax.device_put(keys, spec),
                     round=jnp.int32(0)),
         host=dict(rounds=0, a2a=0, overflow=0, sampler_us=0.0,
-                  occupancy=[0] * len(sg.layout.caps), residual=0))
+                  occupancy=[0] * len(sg.layout.caps), residual=0),
+        layouts={"counts": dict(
+            counts=LayoutSpec(kind="vertex", n=graph.n),
+            zeta=LayoutSpec(kind="vertex", n=graph.n),
+            key=LayoutSpec(kind="replicated_key"),
+            round=LayoutSpec(kind="replicated"))},
+        shards=shards)
 
     def _put(name, arr):
         return (jnp.asarray(arr) if name == "round"

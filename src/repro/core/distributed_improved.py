@@ -121,6 +121,7 @@ from repro.core.graph import CSRGraph
 from repro.core.improved_pagerank import coupon_pool_sizes
 from repro.core.routing import (entry_nbytes, exchange_stacked, lane_slots,
                                 pack_lanes, route_counts, vertex_histogram)
+from repro.checkpoint import LayoutSpec
 from repro.core.simple_pagerank import walks_per_node_for
 from repro.kernels import resolve_use_pallas
 from repro.kernels.multinomial_rows._math import key_words
@@ -574,6 +575,15 @@ def _run_three_phase(
     replays the identical trajectory: `zeta`/`pi` and all telemetry are
     bit-identical to an unfailed run. `resume=True` cold-starts from the
     latest snapshot in `checkpoint_dir` (a previously killed run).
+
+    Elastic resume: every stage declares a `checkpoint.LayoutSpec` schema
+    for its buffers, so the snapshot is mesh-size-agnostic — `resume=True`
+    with a `mesh` of a DIFFERENT device count re-homes coupon slots,
+    vertex shards, and walk lanes onto the new mesh and continues.
+    Phases 2/3 are RNG-free, so a mid-Phase-2 resume re-layouts
+    bit-exactly; only live per-shard key streams (mid-Phase-1, or a tail
+    with surviving walks) are re-derived and therefore statistical,
+    gated by the conformance tolerance.
     """
     shards = int(mesh.devices.size)
     n = graph.n
@@ -801,6 +811,30 @@ def _run_three_phase(
     ])
 
     traj0 = np.full((shards, S_loc_pad, lam), -1, dtype=np.int32)
+    # ---- layout schema: how each stage's buffers sit on the mesh ------
+    # Declared per stage so snapshots are mesh-size-agnostic: a resume
+    # onto a different device count re-homes every buffer through
+    # `checkpoint.relayout_staged_flat` (coupon slots re-placed via the
+    # pool bijection, vertex shards re-split, walk lanes re-bucketed,
+    # per-shard keys re-derived). Slot/vertex/walk/replicated buffers
+    # re-layout bit-exactly; per-shard `key` streams are re-derived, so a
+    # mid-phase-1 (or mid-tail, with tail walks live) elastic resume is
+    # statistically — not bit — identical.
+    _slot = partial(LayoutSpec, kind="slot", n=n, pool=pool_np)
+    _vert = LayoutSpec(kind="vertex", n=n)
+    _rep = LayoutSpec(kind="replicated")
+    layouts = dict(
+        phase1=dict(pos=_slot(fill=-1), alive=_slot(fill=0),
+                    traj=_slot(fill=-1), key=LayoutSpec(kind="key")),
+        phase2=dict(walks=_vert, next_c=_vert, used=_slot(fill=0),
+                    tail_cnt=_vert, dest=_slot(fill=-1),
+                    cterm=_slot(fill=1), traj=_slot(fill=-1), zeta=_vert),
+        phase3=dict(traj=_slot(fill=-1), used=_slot(fill=0), zeta=_vert,
+                    tail_cnt=_vert),
+        tail=dict(pos=LayoutSpec(kind="walk", n=n, cap=cap2, fill=-1),
+                  zeta=_vert, key=LayoutSpec(kind="key"),
+                  round=_rep, dropped=_rep, waited=_rep),
+    )
     ms = StagedState(
         stage=schedule.first_stage,
         arrays=dict(
@@ -816,7 +850,8 @@ def _run_three_phase(
                   wire=dict(phase1=0, report=0, phase2=0, phase3=0, tail=0),
                   sampler_us=0.0, p1_occupancy=[0] * len(layout.caps),
                   residual=0,
-                  traces=[], phase2_records=[]))
+                  traces=[], phase2_records=[]),
+        layouts=layouts, shards=shards)
 
     # ---------------- drive: plain loop or checkpointing supervisor ----
     _scalar_keys = ("round", "dropped", "waited")

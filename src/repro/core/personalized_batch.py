@@ -55,6 +55,7 @@ from repro.core.personalized import (DEFAULT_MAX_ROUNDS, normalize_query,
 from repro.core.routing import (advance_owned, rank_within, route_counts,
                                 count_owned_arrivals, shard_map,
                                 vertex_histogram)
+from repro.checkpoint import LayoutSpec, relayout_arrays
 from repro.kernels import resolve_use_pallas
 
 
@@ -265,6 +266,47 @@ class BatchedPPREngine:
         self.a2a_bytes += int(sent)
         self.dropped += int(dropped)
         return self.active
+
+    # ------------------------------------------------------------- elastic
+    def relayout_from(self, other: "BatchedPPREngine") -> None:
+        """Adopt `other`'s live serving state onto THIS engine's mesh.
+
+        The walk buffer (with its query-id lane), the per-(vertex, query)
+        visit shards, and the telemetry counters carry over through the
+        schema-driven `checkpoint.relayout_arrays` — in-flight queries
+        keep their walks and visit counts bit-for-bit (per-shard keys are
+        re-derived, so the REMAINING steps of live walks are statistical,
+        not a replay). Lets `serve.PPRService.resize` swap the resident
+        engine onto a grown/shrunk mesh mid-traffic.
+        """
+        if (other.graph.n != self.graph.n or other.Q != self.Q
+                or other.walks_per_query != self.walks_per_query):
+            raise ValueError(
+                f"engine mismatch: (n, Q, walks_per_query) "
+                f"{(other.graph.n, other.Q, other.walks_per_query)} vs "
+                f"{(self.graph.n, self.Q, self.walks_per_query)}")
+        n = self.graph.n
+        specs = dict(
+            pos=LayoutSpec(kind="walk", n=n, cap=self.cap, fill=-1,
+                           aux=("qid",)),
+            qid=LayoutSpec(kind="walk_aux", fill=0),
+            zeta=LayoutSpec(kind="vertex", n=n),
+            key=LayoutSpec(kind="key"))
+        arrays = {name: np.asarray(getattr(other.state, name))
+                  for name in ("pos", "qid", "zeta", "key")}
+        out = relayout_arrays(arrays, specs, other.shards, self.shards)
+        self.cap = int(out["pos"].shape[1])    # auto-grown under walk skew
+        spec = self._spec
+        self.state = BatchPPRState(
+            pos=jax.device_put(jnp.asarray(out["pos"]), spec),
+            qid=jax.device_put(jnp.asarray(out["qid"]), spec),
+            zeta=jax.device_put(jnp.asarray(out["zeta"]), spec),
+            key=jax.device_put(jnp.asarray(out["key"]), spec))
+        self.active = other.active.copy()
+        self.rounds = other.rounds
+        self.a2a_bytes = other.a2a_bytes
+        self.dropped = other.dropped
+        self.admit_dropped = other.admit_dropped
 
     # -------------------------------------------------------------- results
     def extract(self, slot: int) -> np.ndarray:

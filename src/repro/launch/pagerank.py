@@ -37,6 +37,21 @@ the same pi, telemetry, and accuracy as an unfailed one, plus restarts>0.
 `--resume` cold-starts from the latest snapshot in --checkpoint-dir (a
 previously killed run) instead of from round 0.
 
+Elastic resume: snapshots record the mesh size they were written under
+and every engine declares a per-buffer layout schema
+(`checkpoint.LayoutSpec`: walk lanes, vertex shards, coupon slots,
+per-shard keys, replicated scalars — see `checkpoint/elastic.py`), so
+`--resume` does NOT need the original device count. Pass `--shards N` to
+run on the first N local devices; when N differs from the snapshot's
+recorded shard count, restore routes through the schema-driven relayout
+and the run continues on the resized mesh. The count-state engine
+(`--algo counts`) resumes BIT-exactly at any N (its RNG is counter-based
+per vertex and its round key replicated); the 3-phase engines resume
+bit-exactly from RNG-free stages (mid-Phase-2/3) and statistically —
+gated by the same `--check` tolerances — when live per-shard key streams
+had to be re-derived. `--shards` also works without `--resume`, simply
+running any engine on a submesh.
+
 Every run validates against power iteration (L1 and top-10 overlap);
 `--check` turns that report into a hard gate (non-zero exit on miss) for
 CI smoke legs.
@@ -99,7 +114,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import Checkpointer, relayout_pagerank_state
 from repro.core import l1_error, normalized, power_iteration, topk_overlap
 from repro.core.distributed import (AXIS, DistState, _make_superstep,
                                     shard_graph, state_from_host,
@@ -129,10 +144,11 @@ def _report_accuracy(pi, g, eps: float, check: bool = False,
 
 def run_walks(g, eps: float, walks_per_node: int, checkpoint_dir,
               fail_at, seed: int, resume: bool = False,
-              use_pallas: bool = False):
-    devs = np.array(jax.devices())
-    mesh = Mesh(devs, (AXIS,))
-    shards = devs.size
+              use_pallas: bool = False, mesh=None,
+              max_restarts: int = 16):
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()), (AXIS,))
+    shards = mesh.devices.size
     sg = shard_graph(g, shards)
     W = g.n * walks_per_node
     cap = 2 * W // shards + shards * 64
@@ -166,8 +182,12 @@ def run_walks(g, eps: float, walks_per_node: int, checkpoint_dir,
     sup = Supervisor(step_fn, state_to_host,
                      lambda f: state_from_host(f, mesh),
                      Checkpointer(ckpt_dir), checkpoint_every=10,
+                     max_restarts=max_restarts,
                      failure_schedule=FailureSchedule(fail_at) if fail_at
-                     else None)
+                     else None,
+                     meta_fn=lambda: dict(shards=shards),
+                     relayout=lambda f, old: relayout_pagerank_state(
+                         f, g.n, shards, cap=cap))
     res = sup.run(state, resume=resume)
     zeta = np.asarray(res.state.zeta).reshape(-1)[: g.n]
     pi = zeta.astype(np.float64) * eps / (g.n * walks_per_node)
@@ -179,7 +199,7 @@ def run_walks(g, eps: float, walks_per_node: int, checkpoint_dir,
 
 def run_ppr(g, eps: float, walks_per_query: int, num_queries: int,
             seed: int, check: bool = False, use_pallas: bool = False,
-            l1_tol: float = 0.15, topk_min: float = 0.6):
+            l1_tol: float = 0.15, topk_min: float = 0.6, mesh=None):
     """Batched PPR: seed-derived multi-source queries, one shared engine.
 
     Validates each query against its OWN `exact_ppr` oracle — PPR has no
@@ -197,7 +217,7 @@ def run_ppr(g, eps: float, walks_per_query: int, num_queries: int,
         queries.append((sources, None))
     res = batched_personalized_pagerank(
         g, eps, queries, walks_per_query, jax.random.PRNGKey(seed),
-        use_pallas=use_pallas or None)
+        mesh=mesh, use_pallas=use_pallas or None)
     peak = max(res.active_trace) if res.active_trace else 0
     print(f"[pagerank] algo=ppr n={g.n} shards={res.shards} "
           f"queries={num_queries} walks/query={walks_per_query} "
@@ -227,24 +247,34 @@ def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
         checkpoint_dir: str | None, fail_at: list[int], seed: int = 0,
         algo: str = "walks", avg_deg: float = 6.0, resume: bool = False,
         check: bool = False, use_pallas: bool = False,
-        num_queries: int = 4):
+        num_queries: int = 4, shards: int | None = None,
+        max_restarts: int = 16):
     if resume and not checkpoint_dir:
         raise SystemExit("[pagerank] --resume needs --checkpoint-dir "
                          "(there is no snapshot to cold-start from)")
+    mesh = None
+    if shards is not None:
+        devs = jax.devices()
+        if not 1 <= shards <= len(devs):
+            raise SystemExit(f"[pagerank] --shards {shards} out of range: "
+                             f"{len(devs)} devices available")
+        mesh = Mesh(np.array(devs[:shards]), (AXIS,))
     g = GENERATORS[graph_kind](n, avg_deg, seed) if graph_kind != "ring" \
         else GENERATORS[graph_kind](n)
     if algo == "ppr":
         # PPR validates per-query vs exact_ppr inside run_ppr; the
         # power-iteration report below does not apply to it
         return run_ppr(g, eps, walks_per_node * g.n, num_queries, seed,
-                       check=check, use_pallas=use_pallas)
+                       check=check, use_pallas=use_pallas, mesh=mesh)
     if algo == "walks":
         pi = run_walks(g, eps, walks_per_node, checkpoint_dir, fail_at,
-                       seed, resume=resume, use_pallas=use_pallas)
+                       seed, resume=resume, use_pallas=use_pallas,
+                       mesh=mesh, max_restarts=max_restarts)
     elif algo == "counts":
         res = distributed_pagerank_counts(
-            g, eps, walks_per_node, jax.random.PRNGKey(seed),
+            g, eps, walks_per_node, jax.random.PRNGKey(seed), mesh=mesh,
             checkpoint_dir=checkpoint_dir, fail_at=fail_at, resume=resume,
+            max_restarts=max_restarts,
             use_pallas=use_pallas or None)
         print(f"[pagerank] algo=counts n={g.n} shards={res.shards} "
               f"rounds={res.rounds} restarts={res.restarts} "
@@ -259,8 +289,9 @@ def run(n: int, eps: float, walks_per_node: int, graph_kind: str,
         engine = (distributed_improved_pagerank if algo == "improved"
                   else distributed_directed_pagerank)
         res = engine(g, eps, walks_per_node, jax.random.PRNGKey(seed),
-                     checkpoint_dir=checkpoint_dir, fail_at=fail_at,
-                     resume=resume, use_pallas=use_pallas)
+                     mesh=mesh, checkpoint_dir=checkpoint_dir,
+                     fail_at=fail_at, resume=resume,
+                     max_restarts=max_restarts, use_pallas=use_pallas)
         print(f"[pagerank] algo={algo} n={g.n} shards={res.shards} "
               f"lam={res.lam} eta={res.eta} ell={res.ell} "
               f"rounds={res.rounds} restarts={res.restarts} "
@@ -308,7 +339,20 @@ def main():
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
     ap.add_argument("--resume", action="store_true",
                     help="cold-start from the latest snapshot in "
-                         "--checkpoint-dir instead of round 0")
+                         "--checkpoint-dir instead of round 0. The "
+                         "snapshot's mesh size does NOT have to match: "
+                         "combine with --shards N to resume a run killed "
+                         "at a different device count (elastic relayout; "
+                         "bit-exact for --algo counts, tolerance-gated "
+                         "when live per-shard key streams are re-derived)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="run on the first N local devices instead of all "
+                         "of them; with --resume, the mesh size to resume "
+                         "ONTO (may differ from the snapshot's)")
+    ap.add_argument("--max-restarts", type=int, default=16,
+                    help="supervisor restart budget before an injected "
+                         "failure is re-raised (0 = die on first failure, "
+                         "leaving the snapshot dir for an elastic resume)")
     ap.add_argument("--check", action="store_true",
                     help="non-zero exit if the accuracy report misses "
                          "L1 < 0.15 / top-10 >= 0.6 (CI smoke gate)")
@@ -320,7 +364,8 @@ def main():
     run(args.n, args.eps, args.walks, args.graph, args.checkpoint_dir,
         args.fail_at, seed=args.seed, algo=args.algo, avg_deg=args.avg_deg,
         resume=args.resume, check=args.check, use_pallas=args.use_pallas,
-        num_queries=args.queries)
+        num_queries=args.queries, shards=args.shards,
+        max_restarts=args.max_restarts)
 
 
 if __name__ == "__main__":

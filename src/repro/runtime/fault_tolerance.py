@@ -22,6 +22,18 @@ with different step functions and different device buffers per phase (the
 stage-tagged `StagedState`. Snapshots carry the stage tag, the stage's
 device buffers, and the host-side telemetry accumulators, so a killed run
 resumes mid-phase and replays the identical trajectory.
+
+Elastic resume: a `StagedState` additionally declares, per stage, a
+`checkpoint.LayoutSpec` schema describing how each device buffer is laid
+out across the mesh (walk lanes / vertex shards / coupon slots /
+per-shard keys / replicated — see `checkpoint/elastic.py`), plus the
+shard count it was built for. `Supervisor.run(resume=True)` compares the
+shard count recorded in the snapshot manifest against the live mesh and,
+on mismatch, routes the restored flat dict through the schema-driven
+`checkpoint.relayout_staged_flat` before `from_host` — so a run killed on
+P shards resumes on P' shards (grown or shrunk), then immediately
+re-snapshots on the new layout so any later crash recovers new-mesh
+state.
 """
 from __future__ import annotations
 
@@ -33,7 +45,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.checkpoint import Checkpointer, pack_json, unpack_json
+from repro.checkpoint import (Checkpointer, pack_json, relayout_staged_flat,
+                              unpack_json)
 
 
 class SimulatedFailure(RuntimeError):
@@ -87,11 +100,22 @@ class StagedState:
     """Machine state threaded through a `StageSchedule`: the tag of the
     stage currently running, that stage's device buffers (a flat
     name -> array dict), and JSON-able host accumulators (round counters,
-    wire volumes, per-round records). Snapshots carry all three."""
+    wire volumes, per-round records). Snapshots carry all three.
+
+    `layouts` (optional) maps stage name -> {buffer name ->
+    `checkpoint.LayoutSpec`}, declaring how each stage's buffers are laid
+    out across the mesh, and `shards` records the mesh size the state was
+    built for; together they make snapshots mesh-size-agnostic — the
+    supervisor routes a resumed snapshot onto a resized mesh through
+    `checkpoint.relayout_staged_flat`. Engines that never resume
+    elastically may leave both unset."""
 
     stage: str
     arrays: Dict[str, Any]
     host: Dict[str, Any]
+    layouts: Dict[str, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict)
+    shards: Optional[int] = None
 
 
 class StageSchedule:
@@ -141,14 +165,20 @@ def staged_to_host(state: StagedState) -> dict:
 
 
 def staged_from_host(flat: Dict[str, np.ndarray],
-                     put: Callable[[str, np.ndarray], Any]) -> StagedState:
+                     put: Callable[[str, np.ndarray], Any],
+                     like: Optional[StagedState] = None) -> StagedState:
     """Rebuild a `StagedState` from a restored flat checkpoint dict.
     `put(name, host_array) -> device array` re-establishes each buffer's
-    sharding (the stage layouts are engine knowledge)."""
+    sharding (the stage layouts are engine knowledge). `like` donates the
+    layout schema and live shard count (not checkpointed — they describe
+    the CURRENT mesh, which on an elastic resume differs from the one the
+    snapshot was written under)."""
     arrays = {k.split("/", 1)[1]: put(k.split("/", 1)[1], v)
               for k, v in flat.items() if k.startswith("arrays/")}
     return StagedState(stage=unpack_json(flat["stage"]), arrays=arrays,
-                       host=unpack_json(flat["host"]))
+                       host=unpack_json(flat["host"]),
+                       layouts=like.layouts if like is not None else {},
+                       shards=like.shards if like is not None else None)
 
 
 @dataclasses.dataclass
@@ -166,12 +196,23 @@ class Supervisor:
     step_fn(state) -> (state, done: bool)
     to_host(state) -> dict            (for checkpointing)
     from_host(dict) -> state          (for recovery)
+    meta_fn() -> dict                 (manifest metadata on every save;
+                                       a "shards" entry enables elastic
+                                       mismatch detection on resume)
+    relayout(flat, old_shards) -> flat  (re-layout a snapshot written
+                                       under `old_shards` onto the live
+                                       mesh; consulted only on resume
+                                       when the manifest's recorded
+                                       shard count differs from
+                                       meta_fn()["shards"])
     """
 
     def __init__(self, step_fn: Callable, to_host: Callable, from_host: Callable,
                  checkpointer: Checkpointer, *, checkpoint_every: int = 10,
                  max_restarts: int = 16, async_checkpoints: bool = False,
-                 failure_schedule: Optional[FailureSchedule] = None):
+                 failure_schedule: Optional[FailureSchedule] = None,
+                 meta_fn: Optional[Callable[[], dict]] = None,
+                 relayout: Optional[Callable[[dict, int], dict]] = None):
         self.step_fn = step_fn
         self.to_host = to_host
         self.from_host = from_host
@@ -180,7 +221,12 @@ class Supervisor:
         self.max_restarts = max_restarts
         self.async_checkpoints = async_checkpoints
         self.failures = failure_schedule
+        self.meta_fn = meta_fn
+        self.relayout = relayout
         self.heartbeat = Heartbeat()
+
+    def _meta(self) -> dict:
+        return self.meta_fn() if self.meta_fn is not None else {}
 
     def run(self, state: Any, *, max_rounds: int = 100_000,
             resume: bool = False) -> SupervisorResult:
@@ -196,8 +242,25 @@ class Supervisor:
                     f"resume requested but no snapshots under "
                     f"{self.ckpt.base_dir}")
             flat, manifest = self.ckpt.restore()
-            state = self.from_host(flat)
             round_idx = int(manifest["step"])
+            old_shards = (manifest.get("metadata") or {}).get("shards")
+            live_shards = self._meta().get("shards")
+            if (old_shards is not None and live_shards is not None
+                    and int(old_shards) != int(live_shards)):
+                if self.relayout is None:
+                    raise ValueError(
+                        f"snapshot under {self.ckpt.base_dir} was written "
+                        f"at {old_shards} shards but the live mesh has "
+                        f"{live_shards} and no relayout hook is configured")
+                flat = self.relayout(flat, int(old_shards))
+                state = self.from_host(flat)
+                # re-anchor immediately: if we crash after this point,
+                # recovery must restore NEW-mesh state, not the old layout
+                self.ckpt.save(round_idx, self.to_host(state),
+                               metadata=self._meta(), blocking=True)
+                ckpts += 1
+            else:
+                state = self.from_host(flat)
         else:
             # fresh run: refuse a directory that already holds snapshots —
             # recovery must never restore foreign state, and silently
@@ -208,7 +271,8 @@ class Supervisor:
                     f"resume=True to continue that run, or clear the "
                     f"directory (Checkpointer.clear()) to start fresh")
             # round-0 checkpoint so recovery is always possible
-            self.ckpt.save(0, self.to_host(state), blocking=True)
+            self.ckpt.save(0, self.to_host(state), metadata=self._meta(),
+                           blocking=True)
             ckpts += 1
         while round_idx < max_rounds:
             t0 = time.perf_counter()
@@ -226,9 +290,13 @@ class Supervisor:
                 round_idx = int(manifest["step"])
                 continue
             self.heartbeat.record(round_idx, time.perf_counter() - t0)
-            if round_idx % self.checkpoint_every == 0:
+            # always snapshot on `done` — a run finishing between periodic
+            # intervals must still leave the directory reflecting its
+            # final state (blocking: nothing overlaps a finished run)
+            if done or round_idx % self.checkpoint_every == 0:
                 self.ckpt.save(round_idx, self.to_host(state),
-                               blocking=not self.async_checkpoints)
+                               metadata=self._meta(),
+                               blocking=done or not self.async_checkpoints)
                 ckpts += 1
             if done:
                 break
@@ -251,6 +319,9 @@ def run_staged(schedule: StageSchedule, state: StagedState,
     `Supervisor` with stage-tagged `staged_to_host` snapshots.
 
     `put(name, host_array)` re-establishes per-buffer sharding on restore.
+    When `state` declares `shards` + `layouts`, snapshots record the mesh
+    size and `resume=True` from a snapshot written at a DIFFERENT shard
+    count re-layouts it onto the live mesh (see `checkpoint/elastic.py`).
     Returns (final state, restarts, checkpoints_written)."""
     if resume and checkpoint_dir is None:
         raise ValueError("resume=True needs checkpoint_dir (there is no "
@@ -266,14 +337,21 @@ def run_staged(schedule: StageSchedule, state: StagedState,
     # caller has no handle to, so remove it once the run is over
     tmp_dir = tempfile.mkdtemp(prefix=tmp_prefix) \
         if checkpoint_dir is None else None
+    meta_fn = ((lambda: dict(shards=int(state.shards)))
+               if state.shards is not None else None)
+    relayout = None
+    if state.shards is not None and state.layouts:
+        live_shards, layouts = int(state.shards), state.layouts
+        relayout = (lambda flat, old_shards: relayout_staged_flat(
+            flat, old_shards, live_shards, layouts))
     try:
         sup = Supervisor(
             schedule.step, staged_to_host,
-            lambda flat: staged_from_host(flat, put),
+            lambda flat: staged_from_host(flat, put, like=state),
             Checkpointer(checkpoint_dir or tmp_dir),
             checkpoint_every=checkpoint_every, max_restarts=max_restarts,
             failure_schedule=FailureSchedule(list(fail_at)) if fail_at
-            else None)
+            else None, meta_fn=meta_fn, relayout=relayout)
         res = sup.run(state, max_rounds=max_rounds, resume=resume)
     finally:
         if tmp_dir is not None:

@@ -19,6 +19,11 @@ cache with hot-source refresh:
     background recompute (hot-source refresh) that overwrites the entry
     when it completes, so hot queries stay fresh without ever blocking.
 
+  * elasticity — `resize(shards=...)` swaps the resident engine onto a
+    grown/shrunk mesh mid-traffic: live walk buffers and visit shards are
+    re-homed via `BatchedPPREngine.relayout_from`, the cache and pending
+    queue (host-side) are untouched, and no query is dropped.
+
 Time is injected (`now=`) so tests and the Poisson-traffic bench
 (benchmarks/bench_serve.py) control the clock; wall time is the default.
 
@@ -39,6 +44,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import Mesh
+
+from repro.core.distributed import AXIS
 from repro.core.graph import CSRGraph
 from repro.core.personalized import normalize_query
 from repro.core.personalized_batch import BatchedPPREngine
@@ -211,6 +219,36 @@ class PPRService:
         self._refreshing.add((hit.sources, hit.weights))
         self.pending.append(refresh)
         self.stats.refreshes += 1
+
+    # -------------------------------------------------------------- elastic
+    def resize(self, *, shards: Optional[int] = None,
+               mesh: Optional[Mesh] = None) -> None:
+        """Rebuild the resident engine on a resized mesh — mid-traffic.
+
+        Pass exactly one of `shards` (the first `shards` local devices) or
+        an explicit `mesh`. The new engine adopts the old one's live walk
+        buffers, visit shards, and telemetry via
+        `BatchedPPREngine.relayout_from`, so NOTHING is dropped: cached
+        results (host-side) stay served bit-identically, in-flight
+        queries keep their walks and accumulated visits and simply finish
+        on the new mesh, and the pending queue admits as before. The
+        production story behind it: lose or gain a host, keep serving.
+        """
+        if (shards is None) == (mesh is None):
+            raise ValueError("pass exactly one of shards= or mesh=")
+        if mesh is None:
+            devs = jax.devices()
+            if int(shards) > len(devs):
+                raise ValueError(f"shards={shards} exceeds the "
+                                 f"{len(devs)} available devices")
+            mesh = Mesh(np.array(devs[:int(shards)]), (AXIS,))
+        old = self.engine
+        new = BatchedPPREngine(
+            self.graph, self.eps, num_slots=old.Q,
+            walks_per_query=old.walks_per_query, mesh=mesh,
+            use_pallas=old.use_pallas)
+        new.relayout_from(old)
+        self.engine = new
 
     # ------------------------------------------------------------- stepping
     def _admit_pending(self, now: float) -> None:
