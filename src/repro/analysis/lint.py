@@ -1,0 +1,354 @@
+"""Jaxpr-level engine lints: RNG-key discipline, dtype funnels, schema.
+
+These passes walk the *same* closed jaxprs the CONGEST auditor traces
+(`analysis.congest` calls them on each engine stage program), so the
+properties they certify hold for the exact programs the runtime executes:
+
+  rng_lint     — no PRNG key is consumed by two `jax.random` equations.
+                 Key reuse silently correlates draws (walk steps that
+                 should be independent share randomness), and it breaks
+                 the elastic-resume contract: a stage whose draws depend
+                 on *how often* a key was touched cannot be replayed.
+                 Stages that consume no RNG at all are flagged so the
+                 resume classifier can certify them bit-exact.
+
+  dtype_lint   — integer counts funneled through float ops. A float32
+                 represents integers exactly only up to 2^24; an engine
+                 whose declared `count_bound` exceeds the target float's
+                 exact range must not route counts through it (the
+                 truncation is silent — counts just stop incrementing).
+                 Weak-type int->float promotions are surfaced as notes.
+
+  schema_lint  — elastic-schema completeness: every device buffer of a
+                 `runtime.StagedState` stage is covered by exactly one
+                 `checkpoint.LayoutSpec` entry, and no spec dangles.
+                 An uncovered buffer resumes as garbage on a resized
+                 mesh; a dangling spec means the schema drifted.
+
+All three return `LintFinding` rows; `severity == "violation"` fails the
+strict CI gate, `"note"` is informational. The walkers recurse through
+pjit / shard_map / scan / while / cond sub-jaxprs, mapping sub-jaxpr
+invars back to the caller's vars so key lineages survive the descent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "LintFinding", "iter_subjaxprs", "rng_lint", "dtype_lint",
+    "schema_lint", "classify_resume",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    lint: str       # "rng" | "dtype" | "schema"
+    severity: str   # "violation" | "note"
+    where: str      # program / jaxpr path the finding anchors to
+    message: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# shared jaxpr plumbing
+# ---------------------------------------------------------------------------
+
+def _is_literal(v: Any) -> bool:
+    return hasattr(v, "val")
+
+
+def _unclose(j: Any) -> Any:
+    """ClosedJaxpr -> Jaxpr (raw Jaxprs pass through)."""
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+def iter_subjaxprs(eqn: Any) -> Iterator[Tuple[Any, List[Any], int]]:
+    """Yield `(inner_jaxpr, outer_invars, trip_mult)` for each sub-jaxpr.
+
+    `outer_invars[i]` is the caller-side var feeding `inner.invars[i]`
+    (None where the positions don't line up). `trip_mult` is how many
+    times one execution of the equation runs the body: scan length for
+    scans, 0 for while bodies (statically unbounded), 1 otherwise — the
+    congest auditor multiplies nested trip counts to detect collectives
+    inside loops.
+    """
+    prim = eqn.primitive.name
+    params = eqn.params
+    if prim == "cond":
+        for br in params["branches"]:
+            inner = _unclose(br)
+            yield inner, list(eqn.invars[1:]), 1
+        return
+    if prim == "while":
+        for k in ("cond_jaxpr", "body_jaxpr"):
+            inner = _unclose(params[k])
+            yield inner, list(eqn.invars), 0
+        return
+    if prim == "scan":
+        yield _unclose(params["jaxpr"]), list(eqn.invars), int(params.get("length", 1))
+        return
+    for k in ("jaxpr", "call_jaxpr"):
+        if k in params:
+            yield _unclose(params[k]), list(eqn.invars), 1
+            return
+    # anything else that stashes a (Closed)Jaxpr in params (custom_* etc.)
+    for v in params.values():
+        if hasattr(v, "eqns") or (hasattr(v, "jaxpr") and hasattr(_unclose(v), "eqns")):
+            yield _unclose(v), list(eqn.invars), 1
+
+
+def _map_invars(inner: Any, outer_invars: List[Any],
+                kidmap: Dict[Any, Any]) -> Dict[Any, Any]:
+    """Carry key lineage ids from caller vars into a sub-jaxpr's invars."""
+    inner_map: Dict[Any, Any] = {}
+    for iv, ov in zip(inner.invars, outer_invars):
+        if ov is None or _is_literal(ov):
+            continue
+        kid = kidmap.get(ov)
+        if kid is not None:
+            inner_map[iv] = kid
+    return inner_map
+
+
+# ---------------------------------------------------------------------------
+# RNG-key discipline
+# ---------------------------------------------------------------------------
+
+# equations that CONSUME a key: two of these on the same lineage = reuse.
+# (`random_fold_in` is NOT a consumer — folding distinct data into one key
+# is the counter-based derivation idiom; each fold_in equation starts its
+# own lineage below. Folding the SAME value twice is statically
+# indistinguishable and out of scope.)
+_RNG_CONSUMERS = frozenset({
+    "random_bits", "random_split", "random_gamma",
+})
+# shape/representation changes that keep the lineage intact.
+_RNG_PASSTHROUGH = frozenset({
+    "random_wrap", "random_unwrap", "squeeze", "reshape",
+    "broadcast_in_dim", "convert_element_type", "copy",
+})
+# ops that DERIVE an independent key from a parent: indexing one row of a
+# random_split result, or folding data in — each equation is its own
+# lineage.
+_RNG_INDEXERS = frozenset({"slice", "dynamic_slice", "gather",
+                           "random_fold_in"})
+
+
+def _keylike(aval: Any) -> bool:
+    try:
+        dtype = aval.dtype
+    except Exception:
+        return False
+    if "key" in str(dtype):          # typed PRNG key arrays (key<fry> etc.)
+        return True
+    try:
+        return (np.issubdtype(dtype, np.unsignedinteger)
+                and getattr(aval, "ndim", 0) >= 1
+                and aval.shape[-1] == 2)
+    except Exception:
+        return False
+
+
+def _rng_walk(jaxpr: Any, kidmap: Dict[Any, Any], counts: Dict[Any, int],
+              sites: Dict[Any, List[str]], path: str) -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim in _RNG_CONSUMERS:
+            v = eqn.invars[0]
+            if not _is_literal(v):
+                kid = kidmap.get(v)
+                if kid is None and _keylike(v.aval):
+                    kid = ("anon", id(v))
+                    kidmap[v] = kid
+                if kid is not None:
+                    counts[kid] = counts.get(kid, 0) + 1
+                    sites.setdefault(kid, []).append(f"{path}{prim}")
+            # split / fold_in derive fresh independent lineages
+            for ov in eqn.outvars:
+                kidmap[ov] = ("derived", id(eqn))
+            continue
+        subs = list(iter_subjaxprs(eqn))
+        if subs:
+            if prim == "cond":
+                # branches are exclusive: key use in both arms of one cond
+                # is NOT reuse — merge consumption counts by max.
+                merged = dict(counts)
+                for inner, outer_invars, _ in subs:
+                    local = dict(counts)
+                    _rng_walk(inner, _map_invars(inner, outer_invars, kidmap),
+                              local, sites, f"{path}{prim}/")
+                    for k, c in local.items():
+                        merged[k] = max(merged.get(k, 0), c)
+                counts.clear()
+                counts.update(merged)
+            else:
+                for inner, outer_invars, _ in subs:
+                    _rng_walk(inner, _map_invars(inner, outer_invars, kidmap),
+                              counts, sites, f"{path}{prim}/")
+            continue
+        if prim in _RNG_INDEXERS:
+            v = eqn.invars[0]
+            if not _is_literal(v):
+                kid = kidmap.get(v)
+                if kid is not None:
+                    start = tuple(eqn.params.get("start_indices", ())) or id(eqn)
+                    kidmap[eqn.outvars[0]] = (kid, prim, start)
+            continue
+        if prim in _RNG_PASSTHROUGH:
+            v = eqn.invars[0]
+            if not _is_literal(v):
+                kid = kidmap.get(v)
+                if kid is not None:
+                    kidmap[eqn.outvars[0]] = kid
+
+
+def rng_lint(closed_jaxpr: Any, *, where: str = "") -> Tuple[List[LintFinding], int]:
+    """Check PRNG-key discipline on one traced program.
+
+    Returns `(findings, consumed)`: one violation per key lineage consumed
+    by more than one `jax.random` equation, plus the total number of RNG
+    consumptions — 0 means the program is RNG-free (and therefore
+    trivially bit-exact under elastic resume).
+    """
+    jaxpr = _unclose(closed_jaxpr)
+    kidmap: Dict[Any, Any] = {}
+    for i, v in enumerate(jaxpr.invars):
+        if _keylike(v.aval):
+            kidmap[v] = ("arg", i)
+    counts: Dict[Any, int] = {}
+    sites: Dict[Any, List[str]] = {}
+    _rng_walk(jaxpr, kidmap, counts, sites, "")
+    findings = []
+    for kid, c in counts.items():
+        if c > 1:
+            findings.append(LintFinding(
+                lint="rng", severity="violation", where=where,
+                message=(f"key lineage {kid!r} consumed {c} times "
+                         f"(at {', '.join(sites[kid])}) — correlated draws; "
+                         f"derive sub-keys with split/fold_in instead")))
+    return findings, sum(counts.values())
+
+
+# ---------------------------------------------------------------------------
+# dtype audit
+# ---------------------------------------------------------------------------
+
+_MANTISSA_BITS = {"float64": 53, "float32": 24, "float16": 11, "bfloat16": 8}
+
+
+def _dtype_walk(jaxpr: Any, count_bound: Optional[int], where: str,
+                path: str, out: List[LintFinding]) -> None:
+    for eqn in jaxpr.eqns:
+        subs = list(iter_subjaxprs(eqn))
+        if subs:
+            for inner, _, _ in subs:
+                _dtype_walk(inner, count_bound, where,
+                            f"{path}{eqn.primitive.name}/", out)
+            continue
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        src = getattr(eqn.invars[0], "aval", None)
+        new_dtype = eqn.params.get("new_dtype")
+        if src is None or new_dtype is None:
+            continue
+        try:
+            src_int = np.issubdtype(src.dtype, np.integer)
+            dst_float = np.issubdtype(np.dtype(new_dtype), np.floating)
+        except Exception:
+            continue
+        if not (src_int and dst_float):
+            continue
+        mant = _MANTISSA_BITS.get(np.dtype(new_dtype).name, 53)
+        if count_bound is not None and count_bound > (1 << mant):
+            out.append(LintFinding(
+                lint="dtype", severity="violation", where=where,
+                message=(f"{path}: {src.dtype}->{np.dtype(new_dtype).name} "
+                         f"funnel with declared count_bound={count_bound} "
+                         f"> 2^{mant} — counts above 2^{mant} truncate "
+                         f"silently; widen or use an exact integer path")))
+        elif getattr(src, "weak_type", False):
+            out.append(LintFinding(
+                lint="dtype", severity="note", where=where,
+                message=(f"{path}: weak-typed {src.dtype} promoted to "
+                         f"{np.dtype(new_dtype).name} (implicit promotion)")))
+
+
+def dtype_lint(closed_jaxpr: Any, *, count_bound: Optional[int] = None,
+               where: str = "") -> List[LintFinding]:
+    """Flag integer->float funnels whose declared count bound exceeds the
+    target float's exact-integer range (2^mantissa)."""
+    out: List[LintFinding] = []
+    _dtype_walk(_unclose(closed_jaxpr), count_bound, where, "", out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# elastic-schema completeness
+# ---------------------------------------------------------------------------
+
+def schema_lint(stage_arrays: Dict[str, Tuple[str, ...]],
+                layouts: Dict[str, Dict[str, Any]]) -> List[LintFinding]:
+    """Every `StagedState` device buffer covered by exactly one
+    `LayoutSpec`, and no spec without a buffer."""
+    out: List[LintFinding] = []
+    for stage, arrays in stage_arrays.items():
+        specs = layouts.get(stage)
+        if specs is None:
+            out.append(LintFinding(
+                lint="schema", severity="violation", where=stage,
+                message=f"stage '{stage}' has no LayoutSpec schema at all"))
+            continue
+        for name in sorted(set(arrays) - set(specs)):
+            out.append(LintFinding(
+                lint="schema", severity="violation", where=stage,
+                message=(f"device buffer '{name}' of stage '{stage}' has no "
+                         f"LayoutSpec — it would resume as garbage on a "
+                         f"resized mesh")))
+        for name in sorted(set(specs) - set(arrays)):
+            out.append(LintFinding(
+                lint="schema", severity="violation", where=stage,
+                message=(f"LayoutSpec '{name}' of stage '{stage}' covers no "
+                         f"device buffer — dangling schema entry")))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# elastic-resume classification (consumes rng_lint + schema info)
+# ---------------------------------------------------------------------------
+
+def classify_resume(stage: str, rng_consumed: int,
+                    layouts_for_stage: Dict[str, Any]
+                    ) -> Tuple[str, List[LintFinding]]:
+    """Classify a stage's elastic-resume guarantee from its RNG usage and
+    how its key buffers are laid out.
+
+      no RNG consumed                  -> bit-exact (RNG-free)
+      RNG + all keys replicated        -> bit-exact (round-replicated key:
+                                          the same per-round key is
+                                          re-derived on any mesh size)
+      RNG + per-shard key buffers      -> statistical (per-shard keys are
+                                          re-derived on resize, so resumed
+                                          draws differ bit-for-bit but not
+                                          in distribution)
+      RNG but no key buffer in schema  -> violation (the stage draws from
+                                          state the checkpoint never saves)
+    """
+    key_kinds = sorted({getattr(s, "kind", "?")
+                        for s in (layouts_for_stage or {}).values()
+                        if getattr(s, "kind", "") in ("key", "replicated_key")})
+    if rng_consumed == 0:
+        return "bit-exact (RNG-free)", []
+    if not key_kinds:
+        return "unresumable", [LintFinding(
+            lint="rng", severity="violation", where=stage,
+            message=(f"stage '{stage}' consumes RNG but its layout schema "
+                     f"holds no key buffer — resumed runs would replay "
+                     f"with lost randomness"))]
+    if key_kinds == ["replicated_key"]:
+        return "bit-exact (replicated key)", []
+    return "statistical (per-shard keys re-derived on resize)", []

@@ -1,9 +1,11 @@
 from repro.checkpoint.checkpointer import (Checkpointer, pack_json,
                                            restore_into, unpack_json)
 from repro.checkpoint.elastic import (LayoutSpec, derive_shard_keys,
-                                      relayout_arrays, relayout_pagerank_state,
+                                      pagerank_state_specs, relayout_arrays,
+                                      relayout_pagerank_state,
                                       relayout_staged_flat)
 
 __all__ = ["Checkpointer", "LayoutSpec", "derive_shard_keys", "pack_json",
-           "relayout_arrays", "relayout_pagerank_state",
-           "relayout_staged_flat", "restore_into", "unpack_json"]
+           "pagerank_state_specs", "relayout_arrays",
+           "relayout_pagerank_state", "relayout_staged_flat", "restore_into",
+           "unpack_json"]

@@ -278,6 +278,21 @@ def relayout_staged_flat(flat: Dict[str, np.ndarray], old_shards: int,
 # walk-engine entry point (kept for the Algorithm-1 walk-state engine)
 # ---------------------------------------------------------------------------
 
+def pagerank_state_specs(n: int, cap: int | None = None) -> Dict:
+    """The Algorithm-1 walk engine's `DistState` layout schema: [P, cap]
+    walk lanes, a [P, n_loc] visit shard, per-shard keys, and replicated
+    scalars. Single home for the schema — `relayout_pagerank_state` and
+    the CONGEST auditor's elastic-schema lint both read it."""
+    return dict(
+        pos=LayoutSpec(kind="walk", n=n, cap=cap, fill=-1),
+        zeta=LayoutSpec(kind="vertex", n=n),
+        key=LayoutSpec(kind="key"),
+        round=LayoutSpec(kind="replicated"),
+        dropped=LayoutSpec(kind="replicated"),
+        waited=LayoutSpec(kind="replicated"),
+    )
+
+
 def relayout_pagerank_state(host_state: Dict, n: int, new_shards: int,
                             cap: int | None = None) -> Dict:
     """Re-layout the Algorithm-1 walk engine's `DistState` host dict
@@ -286,14 +301,7 @@ def relayout_pagerank_state(host_state: Dict, n: int, new_shards: int,
     preserved bit-for-bit; the cap auto-grows under walk skew (an elastic
     resume never fails because one shard holds too many walks); keys are
     re-derived via `derive_shard_keys`."""
-    specs = dict(
-        pos=LayoutSpec(kind="walk", n=n, cap=cap, fill=-1),
-        zeta=LayoutSpec(kind="vertex", n=n),
-        key=LayoutSpec(kind="key"),
-        round=LayoutSpec(kind="replicated"),
-        dropped=LayoutSpec(kind="replicated"),
-        waited=LayoutSpec(kind="replicated"),
-    )
+    specs = pagerank_state_specs(n, cap=cap)
     arrays = {k: np.asarray(v) for k, v in host_state.items()}
     old_shards = arrays["pos"].shape[0]
     return relayout_arrays(arrays, specs, old_shards, new_shards)

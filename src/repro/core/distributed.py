@@ -109,7 +109,7 @@ def _superstep_local(rp, ci, dg, pos, key, zeta, eps: float, n_loc: int,
     shard_id = jax.lax.axis_index(AXIS)
 
     # ---- route: send non-owned walks, up to route_cap per target ----
-    kept, _, recv, _, waited, _, sent_bytes = route_walks(
+    kept, _, recv, _, waited, sent_entries, sent_bytes = route_walks(
         pos, {}, axis=AXIS, shard_id=shard_id, n_loc=n_loc, shards=shards,
         route_cap=route_cap)
     arrived = recv >= 0
@@ -140,9 +140,10 @@ def _superstep_local(rp, ci, dg, pos, key, zeta, eps: float, n_loc: int,
     active = jax.lax.psum(jnp.sum(new_pos >= 0), AXIS)
     dropped = jax.lax.psum(dropped, AXIS)
     waited = jax.lax.psum(waited, AXIS)
+    a2a_entries = jax.lax.psum(sent_entries, AXIS)
     a2a_bytes = jax.lax.psum(sent_bytes, AXIS)
     return (new_pos[None], key[None], zeta[None],
-            active, dropped, waited, a2a_bytes)
+            active, dropped, waited, a2a_entries, a2a_bytes)
 
 
 # memoized: equal (mesh, config) arguments produce byte-identical jitted
@@ -159,17 +160,17 @@ def _make_superstep(mesh: Mesh, eps: float, n_loc: int, shards: int,
     sharded = shard_map(
         fn, mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
-        out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(), P()),
+        out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(), P(), P()),
     )
 
     @jax.jit
     def step(sg_row_ptr, sg_col, sg_deg, state: DistState):
-        new_pos, key, zeta, active, dropped, waited, a2a = sharded(
+        new_pos, key, zeta, active, dropped, waited, entries, a2a = sharded(
             sg_row_ptr, sg_col, sg_deg, state.pos, state.key, state.zeta)
         return DistState(pos=new_pos, zeta=zeta, key=key,
                          round=state.round + 1,
                          dropped=state.dropped + dropped,
-                         waited=state.waited + waited), active, a2a
+                         waited=state.waited + waited), active, entries, a2a
 
     return step
 
@@ -181,6 +182,7 @@ class DistributedResult:
     rounds: int
     dropped: int
     waited: int
+    a2a_entries_total: int   # routed lane entries (4 B each, int32 pos)
     a2a_bytes_total: int
     shards: int
     # per-round telemetry: walks alive after each super-step (walks only
@@ -247,11 +249,13 @@ def distributed_pagerank(
                            int(route_cap), int(work_cap),
                            use_pallas=use_pallas)
     a2a_total = 0
+    entries_total = 0
     rounds = 0
     round_active: List[int] = []
     while rounds < max_rounds:
-        state, active, a2a = step(sg_rp, sg_ci, sg_dg, state)
+        state, active, entries, a2a = step(sg_rp, sg_ci, sg_dg, state)
         a2a_total += int(a2a)
+        entries_total += int(entries)
         rounds += 1
         round_active.append(int(active))
         if int(active) == 0:
@@ -260,7 +264,8 @@ def distributed_pagerank(
     pi = pagerank_from_visits(zeta, graph.n, walks_per_node, eps)
     return DistributedResult(
         zeta=zeta, pi=pi, rounds=rounds, dropped=int(state.dropped),
-        waited=int(state.waited), a2a_bytes_total=a2a_total, shards=shards,
+        waited=int(state.waited), a2a_entries_total=entries_total,
+        a2a_bytes_total=a2a_total, shards=shards,
         round_active=round_active)
 
 
@@ -284,3 +289,57 @@ def state_from_host(d: dict, mesh: Mesh) -> DistState:
         dropped=jnp.int32(d["dropped"]),
         waited=jnp.int32(d["waited"]),
     )
+
+
+# --------------------------------------------------------------------------
+# static wire-budget declaration (consumed by `analysis.congest`)
+# --------------------------------------------------------------------------
+
+def audit_spec(graph: CSRGraph, mesh: Mesh, *, eps: float = 0.2,
+               walks_per_node: int = 2, work_cap: int = 0,
+               use_pallas: bool = False):
+    """The walk engine's `EngineAuditSpec` for the CONGEST auditor.
+
+    The runtime `route_cap` scales with W/P, so this engine's lanes are
+    walk-class wire: the auditor traces with `route_cap` PINNED at n_loc
+    (legal — overflowing walks wait and retry, any cap is correct), which
+    makes the checked capacity a W-free function of the partition. The
+    walk-buffer `cap` never touches the wire and is pinned too.
+    """
+    from repro.checkpoint import pagerank_state_specs
+    from repro.core.accounting import (EngineAuditSpec, ExchangeSite,
+                                       StageProgram)
+    shards = int(mesh.devices.size)
+    sg = shard_graph(graph, shards)
+    n_loc = sg.n_loc
+    route_cap = n_loc
+    cap = n_loc
+    step = _make_superstep(mesh, float(eps), n_loc, shards, route_cap,
+                           int(work_cap), use_pallas=use_pallas)
+    sds = jax.ShapeDtypeStruct
+    i32, u32 = jnp.int32, jnp.uint32
+    state = DistState(pos=sds((shards, cap), i32),
+                      zeta=sds((shards, n_loc), i32),
+                      key=sds((shards, 2), u32),
+                      round=sds((), i32), dropped=sds((), i32),
+                      waited=sds((), i32))
+    args = (sds((shards, n_loc + 1), i32),
+            sds((shards, sg.col_idx.shape[1]), i32),
+            sds((shards, n_loc), i32), state)
+    site = ExchangeSite(
+        site="route", entry_nbytes=4, lane_entries=shards * route_cap,
+        budget_entries=shards * n_loc,
+        budget_formula="P * n_loc lane slots (auditor-pinned "
+                       "route_cap = n_loc)",
+        wire_class="walk",
+        note="runtime route_cap scales with W/P; overflow waits rather "
+             "than widening the lane, so any pinned cap is correct")
+    prog = StageProgram(stage="walks", program="step", fn=step,
+                        example_args=args, sites=(site,),
+                        count_bound=graph.n * walks_per_node)
+    return EngineAuditSpec(
+        engine="walks", programs=[prog],
+        stage_arrays={"walks": ("pos", "zeta", "key", "round", "dropped",
+                                "waited")},
+        layouts={"walks": pagerank_state_specs(graph.n, cap=cap)},
+        meta=dict(shards=shards, n=graph.n, walks_per_node=walks_per_node))

@@ -54,7 +54,7 @@ from repro.core.aggregate_sampler import (BucketLayout, build_layout_sharded,
 from repro.core.distributed import AXIS, shard_map
 from repro.core.estimator import pagerank_from_visits
 from repro.core.graph import CSRGraph
-from repro.core.routing import lane_slots
+from repro.core.routing import entry_nbytes, lane_slots
 from repro.checkpoint import LayoutSpec
 from repro.kernels import resolve_use_pallas
 from repro.kernels.multinomial_rows._math import key_words
@@ -125,21 +125,6 @@ class CountDistState:
     zeta: jnp.ndarray     # [P, n_loc]
     key: jnp.ndarray      # [P, 2]
     round: jnp.ndarray
-
-
-def _multinomial_rows(key, survivors, deg, max_deg: int):
-    """Vectorized conditional-binomial split. survivors/deg [n_loc]."""
-    def body(carry, j):
-        rem, k = carry
-        k, kb = jax.random.split(k)
-        slots_left = jnp.maximum(deg - j, 1).astype(jnp.float32)
-        p = jnp.where(j < deg, 1.0 / slots_left, 0.0)
-        t = jax.random.binomial(kb, rem.astype(jnp.float32), p).astype(jnp.int32)
-        t = jnp.minimum(t, rem)
-        return (rem - t, k), t
-
-    (rem, _), T = jax.lax.scan(body, (survivors, key), jnp.arange(max_deg))
-    return T.T, rem  # [n_loc, max_deg]
 
 
 def _sample_step(bperm, deg, counts, key, *, eps: float, n_loc: int,
@@ -219,7 +204,8 @@ def _exchange_step(bnbr, flat_T, zeta, *, n_loc: int, shards: int,
         arrive = arrive + jax.ops.segment_sum(
             rc, jnp.where(got, rv, 0), num_segments=n_loc)
         wire_entries = jnp.sum(lanes >= 0)
-        bytes_per = 4
+        # dtype-derived, not a magic constant: one packed int32 lane column
+        bytes_per = entry_nbytes(lanes)
     else:
         lanes_v = (jnp.full((shards * lane_cap,), -1, jnp.int32)
                    .at[lane_idx].set(jnp.where(ok, vid2, -1), mode="drop"))
@@ -238,13 +224,15 @@ def _exchange_step(bnbr, flat_T, zeta, *, n_loc: int, shards: int,
             jnp.clip(recv_v - shard_id * n_loc, 0, n_loc - 1),
             num_segments=n_loc)
         wire_entries = jnp.sum(lanes_v >= 0)
-        bytes_per = 8
+        bytes_per = entry_nbytes(lanes_v, lanes_c)
 
     new_counts = arrive
     new_zeta = zeta + arrive
     active = jax.lax.psum(jnp.sum(new_counts), AXIS)
-    a2a_bytes = jax.lax.psum(wire_entries * bytes_per, AXIS)
-    return new_counts[None], new_zeta[None], active, a2a_bytes, overflow
+    a2a_entries = jax.lax.psum(wire_entries, AXIS)
+    a2a_bytes = a2a_entries * bytes_per
+    return (new_counts[None], new_zeta[None], active, a2a_entries,
+            a2a_bytes, overflow)
 
 
 # memoized like the other engines' step makers: the graph's static layout
@@ -268,7 +256,7 @@ def make_count_superstep(mesh: Mesh, eps: float, *, n_loc: int, shards: int,
                 lane_cap=lane_cap, packed=packed),
         mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS)),
-        out_specs=(P(AXIS), P(AXIS), P(), P(), P()),
+        out_specs=(P(AXIS), P(AXIS), P(), P(), P(), P()),
     )
 
     @jax.jit
@@ -277,13 +265,22 @@ def make_count_superstep(mesh: Mesh, eps: float, *, n_loc: int, shards: int,
 
     @jax.jit
     def exchange(bnbr, flat_T, key, state: CountDistState):
-        counts, zeta, active, a2a, overflow = exch_sh(
+        counts, zeta, active, entries, a2a, overflow = exch_sh(
             bnbr, flat_T, state.zeta)
         return (CountDistState(counts=counts, zeta=zeta, key=key,
                                round=state.round + 1),
-                active, a2a, overflow)
+                active, entries, a2a, overflow)
 
     return sample, exchange
+
+
+def _count_layouts(n: int):
+    """Elastic layout schema for the counts engine's single stage — shared
+    by the engine and the CONGEST auditor's schema lint."""
+    return dict(counts=LayoutSpec(kind="vertex", n=n),
+                zeta=LayoutSpec(kind="vertex", n=n),
+                key=LayoutSpec(kind="replicated_key"),
+                round=LayoutSpec(kind="replicated"))
 
 
 @dataclasses.dataclass
@@ -295,6 +292,7 @@ class CountDistResult:
     overflow: int
     shards: int
     lane_cap: int
+    a2a_entries_total: int = 0   # routed (vertex, count) lane entries
     restarts: int = 0            # supervisor recoveries (fault injection)
     checkpoints_written: int = 0
     sampler_us: float = 0.0      # total wall time inside the sample program
@@ -361,13 +359,14 @@ def distributed_pagerank_counts(graph: CSRGraph, eps: float,
         flat_T, key2, occ, residual = sample(bperm, deg, st)
         jax.block_until_ready(flat_T)
         t1 = time.perf_counter()
-        st, active, a2a, ovf = exchange(bnbr, flat_T, key2, st)
+        st, active, entries, a2a, ovf = exchange(bnbr, flat_T, key2, st)
         a.update(counts=st.counts, zeta=st.zeta, key=st.key, round=st.round)
         h = ms.host
-        active_i, a2a_i, ovf_i, occ_v, res_i = jax.device_get(
-            (active, a2a, ovf, occ, residual))
+        active_i, entries_i, a2a_i, ovf_i, occ_v, res_i = jax.device_get(
+            (active, entries, a2a, ovf, occ, residual))
         h["rounds"] += 1
         h["a2a"] += int(a2a_i)
+        h["a2a_entries"] += int(entries_i)
         h["overflow"] += int(ovf_i)
         h["sampler_us"] += (t1 - t0) * 1e6
         h["occupancy"] = [int(x) + int(y)
@@ -382,13 +381,9 @@ def distributed_pagerank_counts(graph: CSRGraph, eps: float,
                     zeta=jax.device_put(jnp.asarray(counts0), spec),
                     key=jax.device_put(keys, spec),
                     round=jnp.int32(0)),
-        host=dict(rounds=0, a2a=0, overflow=0, sampler_us=0.0,
+        host=dict(rounds=0, a2a=0, a2a_entries=0, overflow=0, sampler_us=0.0,
                   occupancy=[0] * len(sg.layout.caps), residual=0),
-        layouts={"counts": dict(
-            counts=LayoutSpec(kind="vertex", n=graph.n),
-            zeta=LayoutSpec(kind="vertex", n=graph.n),
-            key=LayoutSpec(kind="replicated_key"),
-            round=LayoutSpec(kind="replicated"))},
+        layouts={"counts": _count_layouts(graph.n)},
         shards=shards)
 
     def _put(name, arr):
@@ -406,8 +401,61 @@ def distributed_pagerank_counts(graph: CSRGraph, eps: float,
     return CountDistResult(zeta=zeta, pi=pi, rounds=ms.host["rounds"],
                            a2a_bytes_total=ms.host["a2a"],
                            overflow=ms.host["overflow"], shards=shards,
-                           lane_cap=sg.lane_cap, restarts=restarts,
+                           lane_cap=sg.lane_cap,
+                           a2a_entries_total=ms.host["a2a_entries"],
+                           restarts=restarts,
                            checkpoints_written=checkpoints_written,
                            sampler_us=float(ms.host["sampler_us"]),
                            occupancy=tuple(ms.host["occupancy"]),
                            residual=int(ms.host["residual"]))
+
+
+def audit_spec(graph: CSRGraph, mesh: Mesh, *, eps: float = 0.2,
+               walks_per_node: int = 2, packed: bool = True,
+               use_pallas: bool = False, bucketed: bool = True):
+    """CONGEST-auditor spec: the exact memoized step programs the engine
+    runs (same cache keys => same traced jaxprs), the declared wire budget
+    for the single (vertex, count) all_to_all, and the elastic schema."""
+    from repro.core.accounting import (EngineAuditSpec, ExchangeSite,
+                                       StageProgram)
+    shards = int(mesh.devices.size)
+    sg = shard_graph_padded(graph, shards, bucketed=bucketed)
+    n_loc = sg.n_loc
+    sample, exchange = make_count_superstep(
+        mesh, float(eps), n_loc=n_loc, shards=shards, layout=sg.layout,
+        lane_cap=sg.lane_cap, packed=packed, use_pallas=use_pallas)
+    sds = jax.ShapeDtypeStruct
+    i32, u32 = jnp.int32, jnp.uint32
+    state = CountDistState(counts=sds((shards, n_loc), i32),
+                           zeta=sds((shards, n_loc), i32),
+                           key=sds((shards, 2), u32),
+                           round=sds((), i32))
+    bperm = sds((shards, sg.bperm.shape[1]), sg.bperm.dtype)
+    deg = sds((shards, n_loc), sg.deg.dtype)
+    bnbr = sds((shards, sg.bnbr.shape[1]), sg.bnbr.dtype)
+    flat_T = sds((shards, sg.layout.total_edges), i32)
+    key = sds((shards, 2), u32)
+    width = 4 if packed else 8
+    site = ExchangeSite(
+        site="counts", entry_nbytes=width,
+        lane_entries=shards * sg.lane_cap,
+        budget_entries=shards * n_loc,
+        budget_formula=("P * min(cut_max, n_loc) distinct (vertex, count) "
+                        "cells <= P * n_loc"),
+        wire_class="count",
+        note="Lemma 1: lane bound counts distinct destination vertices, "
+             "never walk multiplicity W")
+    progs = [
+        StageProgram(stage="counts", program="sample", fn=sample,
+                     example_args=(bperm, deg, state), sites=(),
+                     count_bound=graph.n * walks_per_node),
+        StageProgram(stage="counts", program="exchange", fn=exchange,
+                     example_args=(bnbr, flat_T, key, state), sites=(site,),
+                     count_bound=graph.n * walks_per_node),
+    ]
+    return EngineAuditSpec(
+        engine="counts", programs=progs,
+        stage_arrays={"counts": ("counts", "zeta", "key", "round")},
+        layouts={"counts": _count_layouts(graph.n)},
+        meta=dict(shards=shards, n=graph.n, lane_cap=sg.lane_cap,
+                  packed=packed, walks_per_node=walks_per_node))

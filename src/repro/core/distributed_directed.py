@@ -63,7 +63,8 @@ from jax.sharding import Mesh
 
 from repro.core.distributed import AXIS
 from repro.core.distributed_improved import (ImprovedDistResult,
-                                             _run_three_phase)
+                                             _run_three_phase,
+                                             three_phase_audit_spec)
 from repro.core.graph import CSRGraph
 from repro.core.improved_pagerank import coupon_pool_sizes
 from repro.core.simple_pagerank import walks_per_node_for
@@ -131,3 +132,22 @@ def distributed_directed_pagerank(
         result_cls=DirectedDistResult,
         uniform_budget=int(pool_np[0]),
         dangling_nodes=int((np.asarray(graph.out_deg) == 0).sum()))
+
+
+def audit_spec(graph: CSRGraph, mesh: Mesh, *, eps: float = 0.2,
+               walks_per_node: int = 2, use_pallas: bool = False,
+               bucketed: bool = True):
+    """Section-5 frontend of the 3-phase audit spec: identical supersteps,
+    uniform (LOCAL-model) coupon pools and the longer Section-5 lam —
+    mirrors `distributed_directed_pagerank`'s sizing exactly."""
+    n = graph.n
+    K = walks_per_node
+    log_n = math.log(max(n, 2))
+    lam = max(1, int(math.ceil(math.sqrt(log_n / eps))))
+    ell = max(lam + 1, int(math.ceil(log_n / eps)))
+    _, pool_np = coupon_pool_sizes(graph, eps, K, lam,
+                                   degree_proportional=False, ell=ell)
+    return three_phase_audit_spec(graph, mesh, eps=eps, K=K,
+                                  pool_np=pool_np, lam=lam,
+                                  engine="directed",
+                                  use_pallas=use_pallas, bucketed=bucketed)

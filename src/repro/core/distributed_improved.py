@@ -134,7 +134,8 @@ _INT32_MAX = 2 ** 31 - 1
 # Phase 1: count-aggregated short-walk pre-computation
 # ---------------------------------------------------------------------------
 
-def _p1_request(pos, alive, *, n_loc: int, shards: int, use_pallas: bool):
+def _p1_request(pos, alive, *, n_loc: int, shards: int, use_pallas: bool,
+                count_bound: Optional[int] = None):
     """Phase-1 program 1 (request): per-vertex live-coupon counts to the
     owners. Output row layout: c[home * n_loc + v] = coupons of `home`
     currently at owned vertex v."""
@@ -144,7 +145,7 @@ def _p1_request(pos, alive, *, n_loc: int, shards: int, use_pallas: bool):
     req = vertex_histogram(pos, alive > 0, n_pad, use_pallas=use_pallas)
     c_by_home, req_entries, req_bytes = route_counts(
         req, axis=AXIS, shard_id=shard_id, n_loc=n_loc, shards=shards,
-        by_source=True, use_pallas=use_pallas)
+        by_source=True, use_pallas=use_pallas, count_bound=count_bound)
     c = c_by_home.reshape(-1)               # [P*n_loc], row = home*n_loc + v
     req_entries = jax.lax.psum(req_entries, AXIS)
     req_bytes = jax.lax.psum(req_bytes, AXIS)
@@ -292,12 +293,16 @@ def _p1_assign(rp, ci, pos, alive, traj, f_cnt, k_perm, t, *,
 @lru_cache(maxsize=64)
 def _make_p1_steps(mesh: Mesh, *, eps: float, n_loc: int, shards: int,
                    md: int, rep_cap: int, S_loc_pad: int,
-                   layout, use_pallas: bool):
+                   layout, use_pallas: bool,
+                   count_bound: Optional[int] = None):
     """Returns (request, sample, assign): the three jitted programs of one
-    Phase-1 round. Split so the driver can time the sampler alone."""
+    Phase-1 round. Split so the driver can time the sampler alone.
+    `count_bound` is the declared upper bound on any routed count (the
+    coupon-pool total) — forwarded to the count reductions so the f32
+    segment kernel is bypassed when it could truncate (> 2^24)."""
     req_sh = shard_map(
         partial(_p1_request, n_loc=n_loc, shards=shards,
-                use_pallas=use_pallas),
+                use_pallas=use_pallas, count_bound=count_bound),
         mesh, in_specs=(P(AXIS), P(AXIS)),
         out_specs=(P(AXIS), P(), P()))
     samp_sh = shard_map(
@@ -320,7 +325,7 @@ def _make_p1_steps(mesh: Mesh, *, eps: float, n_loc: int, shards: int,
 
 def _p2_local(walks, next_c, used, tail_cnt, dest, cterm, psize, pstart,
               slot_v, *, n_loc: int, shards: int, S_loc_pad: int,
-              use_pallas: bool):
+              use_pallas: bool, count_bound: Optional[int] = None):
     """One stitch superstep. Long walks are anonymous, so the state is a
     per-owned-vertex count: allocate the next unused coupons of each
     vertex's pool to the walks waiting there (natural-order consumption —
@@ -346,7 +351,7 @@ def _p2_local(walks, next_c, used, tail_cnt, dest, cterm, psize, pstart,
     dcnt = vertex_histogram(dest, go, n_pad, use_pallas=use_pallas)
     arrivals, sent_entries, sent_bytes = route_counts(
         dcnt, axis=AXIS, shard_id=shard_id, n_loc=n_loc, shards=shards,
-        use_pallas=use_pallas)
+        use_pallas=use_pallas, count_bound=count_bound)
     tail_cnt = tail_cnt + exh
 
     stitched = jax.lax.psum(jnp.sum(a), AXIS)
@@ -361,9 +366,10 @@ def _p2_local(walks, next_c, used, tail_cnt, dest, cterm, psize, pstart,
 
 @lru_cache(maxsize=64)
 def _make_p2_step(mesh: Mesh, *, n_loc: int, shards: int, S_loc_pad: int,
-                  use_pallas: bool):
+                  use_pallas: bool, count_bound: Optional[int] = None):
     fn = partial(_p2_local, n_loc=n_loc, shards=shards,
-                 S_loc_pad=S_loc_pad, use_pallas=use_pallas)
+                 S_loc_pad=S_loc_pad, use_pallas=use_pallas,
+                 count_bound=count_bound)
     sharded = shard_map(fn, mesh,
                         in_specs=(P(AXIS),) * 9,
                         out_specs=(P(AXIS),) * 4 + (P(),) * 6)
@@ -382,7 +388,7 @@ def _make_p2_step(mesh: Mesh, *, n_loc: int, shards: int, S_loc_pad: int,
 # ---------------------------------------------------------------------------
 
 def _p3_local(traj, used, zeta, *, n_loc: int, shards: int,
-              use_pallas: bool):
+              use_pallas: bool, count_bound: Optional[int] = None):
     """Histogram the used coupons' recorded moves and deliver the counts
     to the owner shards in ONE `route_counts` exchange."""
     traj, used, zeta = traj[0], used[0], zeta[0]
@@ -392,7 +398,7 @@ def _p3_local(traj, used, zeta, *, n_loc: int, shards: int,
     part = vertex_histogram(ids, ids >= 0, n_pad, use_pallas=use_pallas)
     arrivals, sent_entries, sent_bytes = route_counts(
         part, axis=AXIS, shard_id=shard_id, n_loc=n_loc, shards=shards,
-        use_pallas=use_pallas)
+        use_pallas=use_pallas, count_bound=count_bound)
     zeta = zeta + arrivals
     entries = jax.lax.psum(sent_entries, AXIS)
     nbytes = jax.lax.psum(sent_bytes, AXIS)
@@ -401,9 +407,9 @@ def _p3_local(traj, used, zeta, *, n_loc: int, shards: int,
 
 @lru_cache(maxsize=64)
 def _make_p3_step(mesh: Mesh, *, n_loc: int, shards: int,
-                  use_pallas: bool):
+                  use_pallas: bool, count_bound: Optional[int] = None):
     fn = partial(_p3_local, n_loc=n_loc, shards=shards,
-                 use_pallas=use_pallas)
+                 use_pallas=use_pallas, count_bound=count_bound)
     sharded = shard_map(fn, mesh, in_specs=(P(AXIS),) * 3,
                         out_specs=(P(AXIS), P(), P()))
 
@@ -436,6 +442,98 @@ def _lane_cap(requested: Optional[int], load: int, shards: int,
     return cap
 
 
+@dataclasses.dataclass(frozen=True)
+class ThreePhasePlan:
+    """Every static size the 3-phase driver derives from (graph, shards,
+    pool, K) — extracted so the CONGEST auditor can rebuild the EXACT
+    step programs (the step makers are lru_cache-memoized on these values,
+    so matching statics means the auditor traces the very objects the
+    engine runs, not lookalikes)."""
+    sg: object                 # distributed.ShardedGraph
+    n_loc: int
+    md: int
+    S_loc_pad: int
+    S_total: int
+    rep_cap: int               # phase-1 reply lanes per shard pair
+    route_cap2: int            # naive-tail walk lanes per shard pair
+    cap2: int                  # naive-tail walk buffer per shard
+    pool_pad: np.ndarray
+    psize_sh: np.ndarray
+    pstart_sh: np.ndarray
+    layout: object             # aggregate_sampler.BucketLayout
+    bperm_np: np.ndarray
+
+
+def plan_three_phase(graph: CSRGraph, shards: int, pool_np: np.ndarray,
+                     K: int, *, route_cap2: Optional[int] = None,
+                     cap2: Optional[int] = None,
+                     bucketed: bool = True) -> ThreePhasePlan:
+    """Single home of the 3-phase static sizing rules (see ThreePhasePlan)."""
+    n = graph.n
+    sg = shard_graph(graph, shards)
+    n_loc = sg.n_loc
+    md = max(int(np.asarray(sg.out_deg).max()), 1)
+
+    # coupon pool layout: contiguous per shard, padded to S_loc_pad
+    pool_pad = np.zeros(sg.n_pad, dtype=np.int64)
+    pool_pad[:n] = pool_np
+    psize_sh = pool_pad.reshape(shards, n_loc)
+    pstart_sh = np.zeros_like(psize_sh)
+    pstart_sh[:, 1:] = np.cumsum(psize_sh, axis=1)[:, :-1]
+    S_loc = psize_sh.sum(axis=1)
+    S_loc_pad = max(int(S_loc.max()), 1)
+    S_total = int(pool_np.sum())
+    if shards * S_loc_pad >= 2 ** 31:
+        raise ValueError("coupon pool too large for int32 ids")
+    if (shards * n_loc + 1) * (S_loc_pad + 1) >= 2 ** 31:
+        raise ValueError("vertex*rank outcome keys overflow int32")
+
+    # Phase-1 reply lanes: a home can receive at most one cell per
+    # (owned-vertex, outcome-class) pair and at most one per coupon
+    rep_cap = min(n_loc * (md + 1), S_loc_pad)
+    # tail (naive fallback) keeps the Algorithm-1 CONGEST sizing rule
+    route_cap2 = _lane_cap(route_cap2, n * K, shards)
+    if cap2 is None:
+        cap2 = max(2 * n * K // shards, n_loc * K) + shards * 64
+
+    deg_np = np.ascontiguousarray(
+        np.asarray(sg.out_deg, np.int32).reshape(shards, n_loc))
+    layout, bperm_np = build_layout_sharded(deg_np, md, bucketed=bucketed)
+    return ThreePhasePlan(sg=sg, n_loc=n_loc, md=md, S_loc_pad=S_loc_pad,
+                          S_total=S_total, rep_cap=rep_cap,
+                          route_cap2=int(route_cap2), cap2=int(cap2),
+                          pool_pad=pool_pad, psize_sh=psize_sh,
+                          pstart_sh=pstart_sh, layout=layout,
+                          bperm_np=bperm_np)
+
+
+def _three_phase_layouts(n: int, pool_np: np.ndarray, cap2: int):
+    """Elastic layout schema per stage — shared by the phase-machine and
+    the CONGEST auditor's schema lint. Declared per stage so snapshots are
+    mesh-size-agnostic: a resume onto a different device count re-homes
+    every buffer through `checkpoint.relayout_staged_flat` (coupon slots
+    re-placed via the pool bijection, vertex shards re-split, walk lanes
+    re-bucketed, per-shard keys re-derived). Slot/vertex/walk/replicated
+    buffers re-layout bit-exactly; per-shard `key` streams are re-derived,
+    so a mid-phase-1 (or mid-tail, with tail walks live) elastic resume is
+    statistically — not bit — identical."""
+    _slot = partial(LayoutSpec, kind="slot", n=n, pool=pool_np)
+    _vert = LayoutSpec(kind="vertex", n=n)
+    _rep = LayoutSpec(kind="replicated")
+    return dict(
+        phase1=dict(pos=_slot(fill=-1), alive=_slot(fill=0),
+                    traj=_slot(fill=-1), key=LayoutSpec(kind="key")),
+        phase2=dict(walks=_vert, next_c=_vert, used=_slot(fill=0),
+                    tail_cnt=_vert, dest=_slot(fill=-1),
+                    cterm=_slot(fill=1), traj=_slot(fill=-1), zeta=_vert),
+        phase3=dict(traj=_slot(fill=-1), used=_slot(fill=0), zeta=_vert,
+                    tail_cnt=_vert),
+        tail=dict(pos=LayoutSpec(kind="walk", n=n, cap=cap2, fill=-1),
+                  zeta=_vert, key=LayoutSpec(kind="key"),
+                  round=_rep, dropped=_rep, waited=_rep),
+    )
+
+
 @dataclasses.dataclass
 class ImprovedDistResult:
     zeta: jnp.ndarray            # [n] global visit counts
@@ -464,6 +562,9 @@ class ImprovedDistResult:
     a2a_bytes_total: int
     a2a_bytes_by_phase: Dict[str, int] = dataclasses.field(
         default_factory=dict)
+    a2a_entries_by_site: Dict[str, int] = dataclasses.field(
+        default_factory=dict)   # routed lane entries per exchange site
+                                # (phase1_req/phase1_rep/phase2/phase3/tail)
     phase2_records: List[dict] = dataclasses.field(default_factory=list)
     report: Optional[CongestReport] = None
     total_visits: int = 0
@@ -589,35 +690,20 @@ def _run_three_phase(
     n = graph.n
     use_pallas = resolve_use_pallas(use_pallas)
 
-    sg = shard_graph(graph, shards)
-    n_loc = sg.n_loc
+    # all static sizing comes from the shared plan (also what the CONGEST
+    # auditor rebuilds — see ThreePhasePlan)
+    plan = plan_three_phase(graph, shards, pool_np, K,
+                            route_cap2=route_cap2, cap2=cap2,
+                            bucketed=bucketed)
+    sg, n_loc, md = plan.sg, plan.n_loc, plan.md
+    S_loc_pad, S_total = plan.S_loc_pad, plan.S_total
+    rep_cap, route_cap2, cap2 = plan.rep_cap, plan.route_cap2, plan.cap2
+    pool_pad, psize_sh, pstart_sh = (plan.pool_pad, plan.psize_sh,
+                                     plan.pstart_sh)
     spec = NamedSharding(mesh, P(AXIS))
     sg_rp = jax.device_put(sg.row_ptr, spec)
     sg_ci = jax.device_put(sg.col_idx, spec)
     sg_dg = jax.device_put(sg.out_deg, spec)
-    md = max(int(np.asarray(sg.out_deg).max()), 1)
-
-    # ---- coupon pool layout: contiguous per shard, padded to S_loc_pad ----
-    pool_pad = np.zeros(sg.n_pad, dtype=np.int64)
-    pool_pad[:n] = pool_np
-    psize_sh = pool_pad.reshape(shards, n_loc)
-    pstart_sh = np.zeros_like(psize_sh)
-    pstart_sh[:, 1:] = np.cumsum(psize_sh, axis=1)[:, :-1]
-    S_loc = psize_sh.sum(axis=1)
-    S_loc_pad = max(int(S_loc.max()), 1)
-    S_total = int(pool_np.sum())
-    if shards * S_loc_pad >= 2 ** 31:
-        raise ValueError("coupon pool too large for int32 ids")
-    if (shards * n_loc + 1) * (S_loc_pad + 1) >= 2 ** 31:
-        raise ValueError("vertex*rank outcome keys overflow int32")
-
-    # Phase-1 reply lanes: a home can receive at most one cell per
-    # (owned-vertex, outcome-class) pair and at most one per coupon
-    rep_cap = min(n_loc * (md + 1), S_loc_pad)
-    # tail (naive fallback) keeps the Algorithm-1 CONGEST sizing rule
-    route_cap2 = _lane_cap(route_cap2, n * K, shards)
-    if cap2 is None:
-        cap2 = max(2 * n * K // shards, n_loc * K) + shards * 64
 
     # ---- Phase-1 placement: slot s of shard p = p's s-th coupon, at its
     # source vertex; slots beyond S_loc[p] are padding (never allocated) --
@@ -642,20 +728,19 @@ def _run_three_phase(
     k1_shards = jax.random.split(k1, shards)
 
     # ---- Phase-1 degree-bucketed sampler layout (static, memoized) ----
-    deg_np = np.ascontiguousarray(
-        np.asarray(sg.out_deg, np.int32).reshape(shards, n_loc))
-    layout, bperm_np = build_layout_sharded(deg_np, md, bucketed=bucketed)
-    bperm_j = jax.device_put(jnp.asarray(bperm_np), spec)
+    layout = plan.layout
+    bperm_j = jax.device_put(jnp.asarray(plan.bperm_np), spec)
 
     # ---- jitted per-phase step functions (shared by fresh + resumed) ----
     p1_req, p1_samp, p1_asn = _make_p1_steps(
         mesh, eps=float(eps), n_loc=n_loc, shards=shards, md=md,
         rep_cap=rep_cap, S_loc_pad=S_loc_pad, layout=layout,
-        use_pallas=use_pallas)
+        use_pallas=use_pallas, count_bound=S_total)
     p2_step = _make_p2_step(mesh, n_loc=n_loc, shards=shards,
-                            S_loc_pad=S_loc_pad, use_pallas=use_pallas)
+                            S_loc_pad=S_loc_pad, use_pallas=use_pallas,
+                            count_bound=n * K)
     p3_step = _make_p3_step(mesh, n_loc=n_loc, shards=shards,
-                            use_pallas=use_pallas)
+                            use_pallas=use_pallas, count_bound=S_total)
     tail_step = _make_superstep(mesh, float(eps), n_loc, shards,
                                 int(route_cap2), 0, use_pallas=use_pallas)
     psize_j = jax.device_put(jnp.asarray(psize_sh, dtype=jnp.int32), spec)
@@ -687,6 +772,8 @@ def _run_three_phase(
         h["phase1_rounds"] += 1
         h["dropped"] += int(overflow)
         h["wire"]["phase1"] += int(req_b) + int(rep_b)
+        h["wire_entries"]["phase1_req"] += int(req_e)
+        h["wire_entries"]["phase1_rep"] += int(rep_e)
         h["sampler_us"] += (t1 - t0) * 1e6
         h["p1_occupancy"] = [int(x) + int(y)
                              for x, y in zip(h["p1_occupancy"], occ_v)]
@@ -729,6 +816,7 @@ def _run_three_phase(
         h["terminated"] += terminated
         h["exhausted"] += exhausted
         h["wire"]["phase2"] += nbytes
+        h["wire_entries"]["phase2"] += entries
         h["phase2_records"].append(dict(
             active=active, stitched=stitched,
             terminated=terminated, exhausted=exhausted))
@@ -755,6 +843,7 @@ def _run_three_phase(
         h = ms.host
         h["phase3_rounds"] += 1
         h["wire"]["phase3"] += nbytes
+        h["wire_entries"]["phase3"] += entries
         h["traces"].append([0, entries])
         return ms, True          # the whole count lands in ONE exchange
 
@@ -788,14 +877,17 @@ def _run_three_phase(
             tstate = DistState(pos=a["pos"], zeta=a["zeta"], key=a["key"],
                                round=a["round"], dropped=a["dropped"],
                                waited=a["waited"])
-            tstate, active, a2a = tail_step(sg_rp, sg_ci, sg_dg, tstate)
+            tstate, active, entries, a2a = tail_step(sg_rp, sg_ci, sg_dg,
+                                                     tstate)
             a.update(pos=tstate.pos, zeta=tstate.zeta, key=tstate.key,
                      round=tstate.round, dropped=tstate.dropped,
                      waited=tstate.waited)
-            active, a2a = (int(x) for x in jax.device_get((active, a2a)))
+            active, entries, a2a = (int(x) for x in
+                                    jax.device_get((active, entries, a2a)))
             h["tail_rounds"] += 1
             h["wire"]["tail"] += a2a
-            h["traces"].append([active, a2a // 4])
+            h["wire_entries"]["tail"] += entries
+            h["traces"].append([active, entries])
             h["tail_active"] = active
         if h["tail_active"]:
             return ms, False
@@ -812,29 +904,8 @@ def _run_three_phase(
 
     traj0 = np.full((shards, S_loc_pad, lam), -1, dtype=np.int32)
     # ---- layout schema: how each stage's buffers sit on the mesh ------
-    # Declared per stage so snapshots are mesh-size-agnostic: a resume
-    # onto a different device count re-homes every buffer through
-    # `checkpoint.relayout_staged_flat` (coupon slots re-placed via the
-    # pool bijection, vertex shards re-split, walk lanes re-bucketed,
-    # per-shard keys re-derived). Slot/vertex/walk/replicated buffers
-    # re-layout bit-exactly; per-shard `key` streams are re-derived, so a
-    # mid-phase-1 (or mid-tail, with tail walks live) elastic resume is
-    # statistically — not bit — identical.
-    _slot = partial(LayoutSpec, kind="slot", n=n, pool=pool_np)
-    _vert = LayoutSpec(kind="vertex", n=n)
-    _rep = LayoutSpec(kind="replicated")
-    layouts = dict(
-        phase1=dict(pos=_slot(fill=-1), alive=_slot(fill=0),
-                    traj=_slot(fill=-1), key=LayoutSpec(kind="key")),
-        phase2=dict(walks=_vert, next_c=_vert, used=_slot(fill=0),
-                    tail_cnt=_vert, dest=_slot(fill=-1),
-                    cterm=_slot(fill=1), traj=_slot(fill=-1), zeta=_vert),
-        phase3=dict(traj=_slot(fill=-1), used=_slot(fill=0), zeta=_vert,
-                    tail_cnt=_vert),
-        tail=dict(pos=LayoutSpec(kind="walk", n=n, cap=cap2, fill=-1),
-                  zeta=_vert, key=LayoutSpec(kind="key"),
-                  round=_rep, dropped=_rep, waited=_rep),
-    )
+    # (shared with the CONGEST auditor — see _three_phase_layouts)
+    layouts = _three_phase_layouts(n, pool_np, cap2)
     ms = StagedState(
         stage=schedule.first_stage,
         arrays=dict(
@@ -848,6 +919,8 @@ def _run_three_phase(
                   stitches=0, terminated=0, exhausted=0, coupons_used=0,
                   tail_walks=0, tail_active=0,
                   wire=dict(phase1=0, report=0, phase2=0, phase3=0, tail=0),
+                  wire_entries=dict(phase1_req=0, phase1_rep=0, phase2=0,
+                                    phase3=0, tail=0),
                   sampler_us=0.0, p1_occupancy=[0] * len(layout.caps),
                   residual=0,
                   traces=[], phase2_records=[]),
@@ -895,9 +968,143 @@ def _run_three_phase(
         coupons_created=S_total, coupons_used=h["coupons_used"],
         dropped=h["dropped"], waited=h["waited"],
         a2a_bytes_total=sum(wire.values()), a2a_bytes_by_phase=wire,
+        a2a_entries_by_site=dict(h["wire_entries"]),
         phase2_records=h["phase2_records"], report=report,
         total_visits=total_visits, restarts=restarts,
         checkpoints_written=checkpoints_written,
         sampler_us=float(h["sampler_us"]),
         p1_occupancy=tuple(h["p1_occupancy"]),
         residual=int(h["residual"]), **extra_fields)
+
+
+# ---------------------------------------------------------------------------
+# CONGEST auditor spec
+# ---------------------------------------------------------------------------
+
+def three_phase_audit_spec(graph: CSRGraph, mesh: Mesh, *, eps: float,
+                           K: int, pool_np: np.ndarray, lam: int,
+                           engine: str = "improved",
+                           use_pallas: bool = False,
+                           bucketed: bool = True):
+    """CONGEST-auditor spec for the 3-phase engines (improved + directed
+    frontends): all six stage programs rebuilt through the SAME memoized
+    step makers with the SAME statics the engine would use (via
+    `plan_three_phase`), each exchange's declared per-round wire budget,
+    and the elastic layout schema.
+
+    The tail stage is a walk-class exchange whose runtime lane cap scales
+    with W/P; overflow there waits rather than widening the lane, so the
+    auditor pins route_cap = cap = n_loc at trace time — any pinned cap
+    yields a correct (and W-free) program to verify."""
+    from repro.core.accounting import (EngineAuditSpec, ExchangeSite,
+                                       StageProgram)
+    shards = int(mesh.devices.size)
+    n = graph.n
+    plan = plan_three_phase(graph, shards, pool_np, K, bucketed=bucketed)
+    n_loc, md = plan.n_loc, plan.md
+    S_loc_pad, S_total = plan.S_loc_pad, plan.S_total
+    rep_cap = plan.rep_cap
+
+    p1_req, p1_samp, p1_asn = _make_p1_steps(
+        mesh, eps=float(eps), n_loc=n_loc, shards=shards, md=md,
+        rep_cap=rep_cap, S_loc_pad=S_loc_pad, layout=plan.layout,
+        use_pallas=use_pallas, count_bound=S_total)
+    p2_step = _make_p2_step(mesh, n_loc=n_loc, shards=shards,
+                            S_loc_pad=S_loc_pad, use_pallas=use_pallas,
+                            count_bound=n * K)
+    p3_step = _make_p3_step(mesh, n_loc=n_loc, shards=shards,
+                            use_pallas=use_pallas, count_bound=S_total)
+    tail_cap = n_loc                       # auditor-pinned (walk-class)
+    tail_step = _make_superstep(mesh, float(eps), n_loc, shards,
+                                tail_cap, 0, use_pallas=use_pallas)
+
+    sds = jax.ShapeDtypeStruct
+    i32, u32 = jnp.int32, jnp.uint32
+    sg = plan.sg
+    rp = sds(sg.row_ptr.shape, sg.row_ptr.dtype)
+    ci = sds(sg.col_idx.shape, sg.col_idx.dtype)
+    dg = sds(sg.out_deg.shape, sg.out_deg.dtype)
+    pos = sds((shards, S_loc_pad), i32)
+    alive = sds((shards, S_loc_pad), i32)
+    traj = sds((shards, S_loc_pad, int(lam)), i32)
+    key = sds((shards, 2), u32)
+    bperm = sds(plan.bperm_np.shape, plan.bperm_np.dtype)
+    c = sds((shards, shards * n_loc), i32)
+    f_cnt = sds((shards, shards * n_loc * (md + 1)), i32)
+    t = sds((), i32)
+    vert = sds((shards, n_loc), i32)
+    slot = sds((shards, S_loc_pad), i32)
+    tail_state = DistState(pos=sds((shards, tail_cap), i32), zeta=vert,
+                           key=key, round=t, dropped=t, waited=t)
+
+    count_budget = shards * n_loc          # Lemma-1 lanes: distinct vertices
+    _count = dict(entry_nbytes=8, lane_entries=count_budget,
+                  budget_entries=count_budget, wire_class="count",
+                  budget_formula="P * n_loc distinct (vertex, count) pairs")
+    rep_site = ExchangeSite(
+        site="phase1_rep", entry_nbytes=12,
+        lane_entries=shards * rep_cap,
+        budget_entries=shards * n_loc * (md + 1),
+        budget_formula=("P * min(n_loc*(max_deg+1), S_loc_pad) distinct "
+                        "(vertex, class, count) cells <= P*n_loc*(md+1)"),
+        wire_class="count",
+        note="stacked F=3 lanes (vertex, outcome class, count)")
+    tail_site = ExchangeSite(
+        site="tail", entry_nbytes=4, lane_entries=shards * tail_cap,
+        budget_entries=shards * n_loc,
+        budget_formula="P * n_loc lane slots (auditor-pinned cap = n_loc)",
+        wire_class="walk",
+        note="naive-fallback walk routing; overflow waits, never widens")
+
+    progs = [
+        StageProgram(stage="phase1", program="request", fn=p1_req,
+                     example_args=(pos, alive),
+                     sites=(ExchangeSite(site="phase1_req", **_count),),
+                     count_bound=S_total),
+        StageProgram(stage="phase1", program="sample", fn=p1_samp,
+                     example_args=(bperm, dg, c, key), sites=(),
+                     count_bound=S_total),
+        StageProgram(stage="phase1", program="assign", fn=p1_asn,
+                     example_args=(rp, ci, pos, alive, traj, f_cnt, key, t),
+                     sites=(rep_site,), count_bound=S_total),
+        StageProgram(stage="phase2", program="stitch", fn=p2_step,
+                     example_args=(vert, vert, slot, vert, slot, slot,
+                                   vert, vert, slot),
+                     sites=(ExchangeSite(site="phase2", **_count),),
+                     count_bound=n * K),
+        StageProgram(stage="phase3", program="count", fn=p3_step,
+                     example_args=(traj, slot, vert),
+                     sites=(ExchangeSite(site="phase3", **_count),),
+                     count_bound=S_total),
+        StageProgram(stage="tail", program="step", fn=tail_step,
+                     example_args=(rp, ci, dg, tail_state),
+                     sites=(tail_site,), count_bound=n * K),
+    ]
+    return EngineAuditSpec(
+        engine=engine, programs=progs,
+        stage_arrays={
+            "phase1": ("pos", "alive", "traj", "key"),
+            "phase2": ("walks", "next_c", "used", "tail_cnt", "dest",
+                       "cterm", "traj", "zeta"),
+            "phase3": ("traj", "used", "zeta", "tail_cnt"),
+            "tail": ("pos", "zeta", "key", "round", "dropped", "waited"),
+        },
+        layouts=_three_phase_layouts(n, pool_np, plan.cap2),
+        meta=dict(shards=shards, n=graph.n, K=K, lam=int(lam), md=md,
+                  rep_cap=rep_cap, S_loc_pad=S_loc_pad, S_total=S_total))
+
+
+def audit_spec(graph: CSRGraph, mesh: Mesh, *, eps: float = 0.2,
+               walks_per_node: int = 2, use_pallas: bool = False,
+               bucketed: bool = True):
+    """Lemma-2 (degree-proportional pools) frontend of the 3-phase audit
+    spec — mirrors `distributed_improved_pagerank`'s sizing exactly."""
+    n = graph.n
+    K = walks_per_node
+    log_n = math.log(max(n, 2))
+    lam = max(1, int(math.ceil(math.sqrt(log_n))))
+    _, pool_np = coupon_pool_sizes(graph, eps, K, lam)
+    return three_phase_audit_spec(graph, mesh, eps=eps, K=K,
+                                  pool_np=pool_np, lam=lam,
+                                  engine="improved", use_pallas=use_pallas,
+                                  bucketed=bucketed)

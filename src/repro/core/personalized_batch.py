@@ -68,8 +68,19 @@ class BatchPPRState:
     key: jnp.ndarray    # [P, 2] per-shard PRNG keys
 
 
+def ppr_state_specs(n: int, cap: int):
+    """Elastic layout schema for the resident PPR engine's buffers —
+    shared by `relayout_from` and the CONGEST auditor's schema lint."""
+    return dict(
+        pos=LayoutSpec(kind="walk", n=n, cap=cap, fill=-1, aux=("qid",)),
+        qid=LayoutSpec(kind="walk_aux", fill=0),
+        zeta=LayoutSpec(kind="vertex", n=n),
+        key=LayoutSpec(kind="key"))
+
+
 def _ppr_superstep(rp, ci, dg, pos, qid, zeta, key, *, eps: float,
-                   n_loc: int, shards: int, Q: int, use_pallas: bool):
+                   n_loc: int, shards: int, Q: int, use_pallas: bool,
+                   count_bound: Optional[int] = None):
     """One batched PPR round on a single shard (runs under shard_map).
 
     All buffered walks are owned by this shard by construction (arrivals
@@ -91,9 +102,9 @@ def _ppr_superstep(rp, ci, dg, pos, qid, zeta, key, *, eps: float,
     u = dst * Q + qid
     per_virtual = vertex_histogram(u, survive, shards * n_loc * Q,
                                    use_pallas=use_pallas)
-    arrivals, _, sent_bytes = route_counts(
+    arrivals, sent_entries, sent_bytes = route_counts(
         per_virtual, axis=AXIS, shard_id=shard_id, n_loc=n_loc * Q,
-        shards=shards, use_pallas=use_pallas)
+        shards=shards, use_pallas=use_pallas, count_bound=count_bound)
 
     # every arrival is a visit to an owned vertex
     zeta = zeta + arrivals.reshape(n_loc, Q)
@@ -114,9 +125,10 @@ def _ppr_superstep(rp, ci, dg, pos, qid, zeta, key, *, eps: float,
                             jnp.where(take, new_qid, Q),
                             num_segments=Q + 1)[:Q], AXIS)
     dropped = jax.lax.psum(jnp.maximum(total - cap, 0), AXIS)
+    sent_entries = jax.lax.psum(sent_entries, AXIS)
     sent_bytes = jax.lax.psum(sent_bytes, AXIS)
     return (new_pos[None], new_qid[None], zeta[None], key[None],
-            active_q, sent_bytes, dropped)
+            active_q, sent_entries, sent_bytes, dropped)
 
 
 def _ppr_admit(pos, qid, zeta, starts, slot, *, n_loc: int, shards: int,
@@ -190,10 +202,12 @@ class BatchedPPREngine:
         step_sh = shard_map(
             partial(_ppr_superstep, eps=self.eps, n_loc=n_loc,
                     shards=self.shards, Q=self.Q,
-                    use_pallas=self.use_pallas),
+                    use_pallas=self.use_pallas,
+                    count_bound=self.walks_per_query),
             mesh,
             in_specs=(P(AXIS),) * 7,
-            out_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(), P(), P()))
+            out_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS),
+                       P(), P(), P(), P()))
         admit_sh = shard_map(
             partial(_ppr_admit, n_loc=n_loc, shards=self.shards, Q=self.Q,
                     use_pallas=self.use_pallas),
@@ -203,10 +217,10 @@ class BatchedPPREngine:
 
         @jax.jit
         def _step(rp, ci, dg, st: BatchPPRState):
-            pos, qid, zeta, key, active_q, sent, dropped = step_sh(
+            pos, qid, zeta, key, active_q, entries, sent, dropped = step_sh(
                 rp, ci, dg, st.pos, st.qid, st.zeta, st.key)
             return (BatchPPRState(pos=pos, qid=qid, zeta=zeta, key=key),
-                    active_q, sent, dropped)
+                    active_q, entries, sent, dropped)
 
         @jax.jit
         def _admit(st: BatchPPRState, starts, slot):
@@ -233,6 +247,7 @@ class BatchedPPREngine:
             key=jax.device_put(jax.random.split(key, self.shards), spec))
         self.active = np.zeros(self.Q, dtype=np.int64)
         self.rounds = 0
+        self.a2a_entries = 0
         self.a2a_bytes = 0
         self.dropped = 0
         self.admit_dropped = 0
@@ -259,10 +274,11 @@ class BatchedPPREngine:
     def superstep(self) -> np.ndarray:
         """Advance every live walk of every query one round; returns the
         [Q] per-query live-walk counts (0 = query complete)."""
-        self.state, active_q, sent, dropped = self._step(
+        self.state, active_q, entries, sent, dropped = self._step(
             self._rp, self._ci, self._dg, self.state)
         self.active = np.asarray(active_q, dtype=np.int64)
         self.rounds += 1
+        self.a2a_entries += int(entries)
         self.a2a_bytes += int(sent)
         self.dropped += int(dropped)
         return self.active
@@ -286,12 +302,7 @@ class BatchedPPREngine:
                 f"{(other.graph.n, other.Q, other.walks_per_query)} vs "
                 f"{(self.graph.n, self.Q, self.walks_per_query)}")
         n = self.graph.n
-        specs = dict(
-            pos=LayoutSpec(kind="walk", n=n, cap=self.cap, fill=-1,
-                           aux=("qid",)),
-            qid=LayoutSpec(kind="walk_aux", fill=0),
-            zeta=LayoutSpec(kind="vertex", n=n),
-            key=LayoutSpec(kind="key"))
+        specs = ppr_state_specs(n, self.cap)
         arrays = {name: np.asarray(getattr(other.state, name))
                   for name in ("pos", "qid", "zeta", "key")}
         out = relayout_arrays(arrays, specs, other.shards, self.shards)
@@ -304,6 +315,7 @@ class BatchedPPREngine:
             key=jax.device_put(jnp.asarray(out["key"]), spec))
         self.active = other.active.copy()
         self.rounds = other.rounds
+        self.a2a_entries = other.a2a_entries
         self.a2a_bytes = other.a2a_bytes
         self.dropped = other.dropped
         self.admit_dropped = other.admit_dropped
@@ -326,6 +338,7 @@ class BatchPPRResult:
     admit_dropped: int       # admission overflow — 0 for an exact run
     shards: int
     active_trace: List[int]  # total live walks after each superstep
+    a2a_entries: int = 0     # routed (virtual vertex, count) lane entries
 
 
 def batched_personalized_pagerank(
@@ -355,6 +368,49 @@ def batched_personalized_pagerank(
     ppr = np.stack([engine.extract(i) for i in range(len(queries))])
     return BatchPPRResult(ppr=ppr, rounds=engine.rounds,
                           a2a_bytes=engine.a2a_bytes,
+                          a2a_entries=engine.a2a_entries,
                           dropped=engine.dropped,
                           admit_dropped=engine.admit_dropped,
                           shards=engine.shards, active_trace=trace)
+
+
+def audit_spec(graph: CSRGraph, mesh: Mesh, *, eps: float = 0.2,
+               num_slots: int = 2, walks_per_query: int = 8,
+               use_pallas: bool = False):
+    """CONGEST-auditor spec for the batched PPR engine: the resident
+    engine's jitted superstep (built with an auditor-pinned walk cap — the
+    virtual-lane wire bound is independent of the buffer size), its
+    declared (vertex, query)-lane budget, and the elastic schema."""
+    from repro.core.accounting import (EngineAuditSpec, ExchangeSite,
+                                       StageProgram)
+    shards = int(mesh.devices.size)
+    engine = BatchedPPREngine(graph, eps, num_slots=num_slots,
+                              walks_per_query=walks_per_query, mesh=mesh,
+                              cap=64, use_pallas=use_pallas)
+    n_loc, Q, cap = engine.sg.n_loc, engine.Q, engine.cap
+    sds = jax.ShapeDtypeStruct
+    i32, u32 = jnp.int32, jnp.uint32
+    sg = engine.sg
+    state = BatchPPRState(pos=sds((shards, cap), i32),
+                          qid=sds((shards, cap), i32),
+                          zeta=sds((shards, n_loc, Q), i32),
+                          key=sds((shards, 2), u32))
+    args = (sds(sg.row_ptr.shape, sg.row_ptr.dtype),
+            sds(sg.col_idx.shape, sg.col_idx.dtype),
+            sds(sg.out_deg.shape, sg.out_deg.dtype), state)
+    site = ExchangeSite(
+        site="ppr", entry_nbytes=8, lane_entries=shards * n_loc * Q,
+        budget_entries=shards * n_loc * Q,
+        budget_formula=("P * n_loc * Q distinct (vertex, query) virtual "
+                        "lanes — Lemma 1 extended by the query-id lane"),
+        wire_class="count",
+        note="bounded by distinct (vertex, query) pairs, never walk count")
+    prog = StageProgram(stage="serve", program="superstep", fn=engine._step,
+                        example_args=args, sites=(site,),
+                        count_bound=walks_per_query)
+    return EngineAuditSpec(
+        engine="ppr", programs=[prog],
+        stage_arrays={"serve": ("pos", "qid", "zeta", "key")},
+        layouts={"serve": ppr_state_specs(graph.n, cap)},
+        meta=dict(shards=shards, n=graph.n, Q=Q,
+                  walks_per_query=walks_per_query))

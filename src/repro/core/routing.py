@@ -162,15 +162,18 @@ def entry_nbytes(*columns) -> int:
 
 
 def _seg_reduce(values: jnp.ndarray, seg: jnp.ndarray, num_segments: int,
-                use_pallas: bool) -> jnp.ndarray:
+                use_pallas: bool, count_bound=None) -> jnp.ndarray:
     """Sum `values` into `num_segments` buckets; out-of-range seg ids drop.
 
     With `use_pallas` the reduction runs through the `segment_spmv` kernel
-    (fp32 accumulation — exact for integer counts below 2**24, which the
-    int32 coupon-pool guard already implies for per-vertex counts)."""
+    (fp32 accumulation — exact for integer counts below 2**24). Engines
+    declare the largest reachable count via `count_bound`; past 2**24 the
+    kernel wrapper widens to an exact integer reduction instead of
+    truncating (see `kernels/segment_spmv/ops.py`)."""
     if use_pallas:
-        return _segment_spmv_kernel(values.astype(jnp.float32), seg,
-                                    num_segments).astype(values.dtype)
+        return _segment_spmv_kernel(values, seg, num_segments,
+                                    count_bound=count_bound
+                                    ).astype(values.dtype)
     return jax.ops.segment_sum(values, jnp.where(
         (seg >= 0) & (seg < num_segments), seg, num_segments),
         num_segments=num_segments + 1)[:num_segments]
@@ -194,7 +197,8 @@ def vertex_histogram(v: jnp.ndarray, mask: jnp.ndarray, num_vertices: int,
 
 def route_counts(per_vertex: jnp.ndarray, *, axis: str,
                  shard_id: jnp.ndarray, n_loc: int, shards: int,
-                 by_source: bool = False, use_pallas: bool = False):
+                 by_source: bool = False, use_pallas: bool = False,
+                 count_bound=None):
     """One Lemma-1 aggregated exchange: per-destination-vertex counts
     travel as (vertex, count) pairs — payload bounded by the number of
     distinct destination vertices, independent of how many walks move.
@@ -229,12 +233,12 @@ def route_counts(per_vertex: jnp.ndarray, *, axis: str,
     if by_source:
         src = jnp.arange(shards * n_loc, dtype=jnp.int32) // n_loc
         seg = jnp.where(got, src * n_loc + local_v, n_pad)
-        arrivals = _seg_reduce(cnt, seg, n_pad,
-                               use_pallas).reshape(shards, n_loc)
+        arrivals = _seg_reduce(cnt, seg, n_pad, use_pallas,
+                               count_bound).reshape(shards, n_loc)
         arrivals = arrivals.at[shard_id].add(own)
     else:
         seg = jnp.where(got, local_v, n_loc)
-        arrivals = _seg_reduce(cnt, seg, n_loc, use_pallas) + own
+        arrivals = _seg_reduce(cnt, seg, n_loc, use_pallas, count_bound) + own
     return arrivals, sent_entries, sent_bytes
 
 

@@ -1,13 +1,39 @@
-"""Jitted public wrapper: Pallas on TPU, interpret elsewhere."""
+"""Jitted public wrapper: Pallas on TPU, interpret elsewhere.
+
+The kernel accumulates in float32, which is exact for integer values only
+up to 2**24 (the f32 mantissa). Integer inputs therefore go through a
+guarded cast: callers declare the largest count a segment sum can reach
+via `count_bound`, and when that bound exceeds the f32 exact-integer
+range the reduction is widened to an exact integer `segment_sum` instead
+of silently truncating (the PR-7 sampler-precision bug class). With no
+declared bound, or a bound within range, integer inputs take the same
+f32 kernel path as before, bit-identically.
+"""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret
 from repro.kernels.segment_spmv.segment_spmv import segment_spmv_pallas
 
+# largest integer float32 represents exactly (24 mantissa bits)
+F32_EXACT_MAX = 2 ** 24
+
 
 def segment_spmv(values: jnp.ndarray, dst: jnp.ndarray, num_segments: int,
-                 **kw) -> jnp.ndarray:
+                 *, count_bound=None, **kw) -> jnp.ndarray:
     kw.setdefault("interpret", default_interpret())
+    if jnp.issubdtype(values.dtype, jnp.integer):
+        if count_bound is not None and int(count_bound) > F32_EXACT_MAX:
+            # f32 accumulation can no longer represent every partial sum
+            # exactly — widen to an exact integer segment_sum (same
+            # out-of-range drop semantics as the kernel: invalid ids hit
+            # a discarded overflow segment).
+            seg = jnp.where((dst >= 0) & (dst < num_segments), dst,
+                            num_segments)
+            return jax.ops.segment_sum(
+                values, seg, num_segments=num_segments + 1)[:num_segments]
+        return segment_spmv_pallas(values.astype(jnp.float32), dst,
+                                   num_segments, **kw).astype(values.dtype)
     return segment_spmv_pallas(values, dst, num_segments, **kw)

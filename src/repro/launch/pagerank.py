@@ -104,6 +104,37 @@ Accuracy is reported per query against the `exact_ppr` dense linear
 solve (NOT power iteration — PPR's stationary vector depends on the
 query's source distribution); `--check` gates on the same L1/top-10
 thresholds as the global-PageRank algos.
+
+`--audit` runs the CONGEST auditor instead of an engine: every engine's
+jitted stage programs are traced to jaxprs (the engines' own memoized
+programs — identical cache keys, so the trace IS the runtime program),
+each all_to_all is checked against its declared per-round lane budget,
+the RNG / dtype / elastic-schema lints run over the same traces, the
+engines execute on fixture graphs to cross-check the static widths
+against runtime telemetry, and AUDIT.json is written next to the table.
+Non-zero exit on any violation. Per-engine wire budgets (P = shards,
+n_loc = ceil(n/P), md = max degree, Q = PPR query slots; every entry is
+a Lemma-1 (vertex, count) cell except the walk-class lanes, whose caps
+the auditor pins at n_loc so the checked capacity stays W-free):
+
+  engine    site         B/entry  per-shard-per-round lane budget
+  walks     route          4      P * n_loc walk slots       [walk-class]
+  counts    counts         4      P * min(cut_max, n_loc) cells
+  improved  phase1_req     8      P * n_loc cells
+            phase1_rep    12      P * n_loc * (md+1) (vertex,class,count)
+            phase2         8      P * n_loc cells
+            phase3         8      P * n_loc cells
+            tail           4      P * n_loc walk slots       [walk-class]
+  directed  same five sites as improved (uniform-budget coupon pools)
+  ppr       ppr            8      P * n_loc * Q (vertex, query) lanes
+
+No budget depends on the walk multiplicity W: the auditor rebuilds every
+spec at 2x walks and fails if any budget moves. The RNG lint also
+certifies which stages resume bit-exactly after an elastic restore:
+`counts` (replicated round key, counter-based RNG) and the 3-phase
+engines' phase2/phase3 programs (RNG-free) are bit-exact; walks, phase1,
+tail, and ppr consume per-shard key streams that are re-derived on a
+resized mesh, so their resume is statistical (tolerance-gated).
 """
 from __future__ import annotations
 
@@ -175,7 +206,7 @@ def run_walks(g, eps: float, walks_per_node: int, checkpoint_dir,
                            use_pallas=use_pallas)
 
     def step_fn(s):
-        s2, active, _ = step(rp, ci, dg, s)
+        s2, active, _, _ = step(rp, ci, dg, s)
         return s2, int(active) == 0
 
     ckpt_dir = checkpoint_dir or tempfile.mkdtemp(prefix="pr_ckpt_")
@@ -360,7 +391,26 @@ def main():
                     help="route the hot paths through the Pallas kernels "
                          "(bit-identical results; interpret mode on CPU). "
                          "REPRO_USE_PALLAS=1 is the flagless equivalent")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the CONGEST wire-budget + lint auditor over "
+                         "every engine instead of a PageRank run: prints "
+                         "the per-engine wire table, writes AUDIT.json, "
+                         "exits non-zero on any violation (see the module "
+                         "docstring for the budget table)")
     args = ap.parse_args()
+    if args.audit:
+        import json
+
+        from repro.analysis.congest import (audit_all_engines,
+                                            format_wire_table)
+        report = audit_all_engines(use_pallas=args.use_pallas, eps=args.eps)
+        print(format_wire_table(report))
+        with open("AUDIT.json", "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print("[pagerank] wrote AUDIT.json")
+        if not report["ok"]:
+            raise SystemExit("[pagerank] CONGEST audit FAILED")
+        return
     run(args.n, args.eps, args.walks, args.graph, args.checkpoint_dir,
         args.fail_at, seed=args.seed, algo=args.algo, avg_deg=args.avg_deg,
         resume=args.resume, check=args.check, use_pallas=args.use_pallas,

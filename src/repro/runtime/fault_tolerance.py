@@ -146,6 +146,16 @@ class StageSchedule:
     def step(self, state: StagedState) -> Tuple[StagedState, bool]:
         i = self._index[state.stage]
         stage = self.stages[i]
+        specs = state.layouts.get(state.stage)
+        if specs is not None and set(specs) != set(state.arrays):
+            # an uncovered buffer would silently vanish from elastic
+            # snapshots; a spec without a buffer means the schema rotted
+            missing = set(state.arrays) - set(specs)
+            extra = set(specs) - set(state.arrays)
+            raise ValueError(
+                f"stage '{state.stage}' layout schema out of sync with its "
+                f"device buffers: uncovered buffers {sorted(missing)}, "
+                f"dangling specs {sorted(extra)}")
         state, stage_done = stage.step(state)
         if not stage_done:
             return state, False

@@ -1,0 +1,80 @@
+"""Unit coverage for the HLO collective parser + roofline smoke.
+
+`collective_bytes` used to double count async collectives twice over: the
+`-start` op returns a `(operands..., results...)` tuple (both halves were
+summed) and the `-done` op returns the result again (skipped only by a
+substring match on the whole line, which misfired on operand names
+containing "-done"). These tests pin the structural fix.
+"""
+import json
+
+from repro.analysis.hlo import collective_bytes, count_ops
+from repro.analysis.roofline import build_roofline
+
+SYNC_HLO = """\
+HloModule m
+ENTRY %main {
+  %x = f32[128]{0} parameter(0)
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %x), replica_groups={}
+  ROOT %a2a = s32[8,24]{1,0} all-to-all(s32[8,24]{1,0} %y), dimensions={0}
+}
+"""
+
+ASYNC_HLO = """\
+HloModule m
+ENTRY %main {
+  %p = f32[4,8]{1,0} parameter(0)
+  %ag-start = (f32[4,8]{1,0}, f32[32,8]{1,0}) all-gather-start(f32[4,8]{1,0} %p), dimensions={0}
+  %ag-done = f32[32,8]{1,0} all-gather-done((f32[4,8]{1,0}, f32[32,8]{1,0}) %ag-start)
+  %cp-start = (u32[2]{0}, u32[2]{0}) collective-permute-start(u32[2]{0} %q)
+  %cp-done = u32[2]{0} collective-permute-done((u32[2]{0}, u32[2]{0}) %cp-start)
+}
+"""
+
+
+def test_sync_collectives_and_root():
+    b = collective_bytes(SYNC_HLO)
+    assert b["all-reduce"] == 128 * 4
+    # ROOT-prefixed ops must be parsed too
+    assert b["all-to-all"] == 8 * 24 * 4
+
+
+def test_async_pair_counted_once_result_half_only():
+    b = collective_bytes(ASYNC_HLO)
+    # start tuple = (operand f32[4,8], result f32[32,8]): only the result
+    # half is payload, and the -done op must not add anything
+    assert b["all-gather"] == 32 * 8 * 4
+    assert b["collective-permute"] == 2 * 4
+
+
+def test_done_detection_is_structural_not_substring():
+    # an *operand* named like a done op must not suppress the line
+    hlo = "  %x = f32[4]{0} all-reduce(f32[4]{0} %ag-done.1)\n"
+    assert collective_bytes(hlo) == {"all-reduce": 16}
+
+
+def test_count_ops_skips_done_only():
+    counts = count_ops(SYNC_HLO + ASYNC_HLO)
+    assert counts == {"all-reduce": 1, "all-to-all": 1, "all-gather": 1,
+                      "collective-permute": 1}
+
+
+def test_tuple_shape_sum_without_async_suffix():
+    # a plain (non-start) tuple result sums every element
+    hlo = "  %t = (f32[2]{0}, s32[3]{0}) all-to-all(f32[2]{0} %a, s32[3]{0} %b)\n"
+    assert collective_bytes(hlo) == {"all-to-all": 2 * 4 + 3 * 4}
+
+
+def test_roofline_smoke():
+    cost = {"flops": 1.0e12, "bytes accessed": 2.0e9}
+    mem = {"argument_size_in_bytes": 1 << 20, "temp_size_in_bytes": 1 << 18,
+           "output_size_in_bytes": 1 << 16}
+    r = build_roofline("v5e", "tiny", "dp8", 8, cost, mem, SYNC_HLO,
+                       model_flops=6.0e12)
+    assert r.coll_breakdown["all-reduce"] == 512
+    assert r.coll_bytes == 512 + 768
+    assert r.coll_ops == {"all-reduce": 1, "all-to-all": 1}
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert r.step_time == max(r.t_compute, r.t_memory, r.t_collective) > 0
+    assert 0 < r.mfu < 1
+    json.dumps(r.to_dict())  # the dashboard artifact must serialize

@@ -1,0 +1,191 @@
+"""CONGEST auditor + engine lints: unit coverage and the full-fleet gate.
+
+The lint passes are exercised in-process on hand-built jaxprs; the full
+auditor (trace every engine's stage programs, check the declared wire
+budgets, cross-check static widths against runtime telemetry) runs in a
+forced-8-device subprocess, exactly as the CI audit job invokes it.
+"""
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+
+from conftest import run_forced_devices
+from repro.analysis.lint import (classify_resume, dtype_lint, rng_lint,
+                                 schema_lint)
+
+KEY = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# RNG-key discipline
+# ---------------------------------------------------------------------------
+
+def test_rng_lint_flags_key_reuse():
+    def bad(key):
+        return jax.random.uniform(key, (4,)) + jax.random.normal(key, (4,))
+
+    findings, consumed = rng_lint(jax.make_jaxpr(bad)(KEY), where="bad")
+    assert consumed >= 2
+    assert any(f.severity == "violation" for f in findings)
+
+
+def test_rng_lint_accepts_split_discipline():
+    def good(key):
+        k1, k2 = jax.random.split(key)
+        return jax.random.uniform(k1, (4,)) + jax.random.normal(k2, (4,))
+
+    findings, consumed = rng_lint(jax.make_jaxpr(good)(KEY), where="good")
+    assert findings == []
+    assert consumed >= 3  # the split itself + one draw per sub-key
+
+
+def test_rng_lint_fold_in_derives_fresh_lineage():
+    def good(key):
+        a = jax.random.uniform(jax.random.fold_in(key, 1), (4,))
+        b = jax.random.uniform(jax.random.fold_in(key, 2), (4,))
+        return a + b
+
+    findings, _ = rng_lint(jax.make_jaxpr(good)(KEY), where="fold")
+    assert findings == []
+
+
+def test_rng_lint_zero_consumption_means_rng_free():
+    def pure(x):
+        return x * 2
+
+    findings, consumed = rng_lint(
+        jax.make_jaxpr(pure)(jax.ShapeDtypeStruct((4,), jnp.int32)))
+    assert findings == [] and consumed == 0
+
+
+# ---------------------------------------------------------------------------
+# dtype funnels
+# ---------------------------------------------------------------------------
+
+def test_dtype_lint_flags_overflowing_funnel():
+    def f(x):
+        return x.astype(jnp.float32).sum()
+
+    cj = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((8,), jnp.int32))
+    bad = [v for v in dtype_lint(cj, count_bound=2 ** 25, where="f")
+           if v.severity == "violation"]
+    assert len(bad) == 1 and "2^24" in bad[0].message
+
+
+def test_dtype_lint_accepts_bounded_counts():
+    def f(x):
+        return x.astype(jnp.float32).sum()
+
+    cj = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((8,), jnp.int32))
+    assert [v for v in dtype_lint(cj, count_bound=1000)
+            if v.severity == "violation"] == []
+    # and with no declared bound the funnel is at most a note
+    assert [v for v in dtype_lint(cj) if v.severity == "violation"] == []
+
+
+# ---------------------------------------------------------------------------
+# elastic schema
+# ---------------------------------------------------------------------------
+
+def test_schema_lint_both_directions():
+    spec = types.SimpleNamespace(kind="vertex")
+    ok = schema_lint({"s": ("a", "b")}, {"s": {"a": spec, "b": spec}})
+    assert ok == []
+    missing = schema_lint({"s": ("a", "b")}, {"s": {"a": spec}})
+    assert len(missing) == 1 and "'b'" in missing[0].message
+    dangling = schema_lint({"s": ("a",)}, {"s": {"a": spec, "ghost": spec}})
+    assert len(dangling) == 1 and "'ghost'" in dangling[0].message
+    nostage = schema_lint({"s": ("a",)}, {})
+    assert len(nostage) == 1 and "no LayoutSpec schema" in nostage[0].message
+
+
+def test_classify_resume_matrix():
+    key = types.SimpleNamespace(kind="key")
+    rkey = types.SimpleNamespace(kind="replicated_key")
+    vert = types.SimpleNamespace(kind="vertex")
+    cls, v = classify_resume("s", 0, {"zeta": vert})
+    assert cls.startswith("bit-exact") and not v
+    cls, v = classify_resume("s", 3, {"key": rkey, "zeta": vert})
+    assert cls == "bit-exact (replicated key)" and not v
+    cls, v = classify_resume("s", 3, {"key": key, "zeta": vert})
+    assert cls.startswith("statistical") and not v
+    cls, v = classify_resume("s", 3, {"zeta": vert})
+    assert cls == "unresumable" and len(v) == 1
+
+
+# ---------------------------------------------------------------------------
+# the auditor itself (forced 8-device subprocesses, like the CI audit job)
+# ---------------------------------------------------------------------------
+
+def test_auditor_catches_violations():
+    """Negative control: an undeclared ppermute and a tampered declared
+    entry width must both be flagged."""
+    out = run_forced_devices("""
+import dataclasses, json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.analysis.congest import audit_program
+from repro.core.accounting import StageProgram
+from repro.core.distributed import AXIS, audit_spec
+from repro.core.routing import shard_map
+from repro.graphs import erdos_renyi
+
+mesh = Mesh(np.array(jax.devices()), (AXIS,))
+shards = int(mesh.devices.size)
+
+def body(x):
+    perm = [(s, (s + 1) % shards) for s in range(shards)]
+    return jax.lax.ppermute(x, AXIS, perm)
+
+f = jax.jit(shard_map(body, mesh, P(AXIS), P(AXIS)))
+prog = StageProgram(stage="toy", program="perm", fn=f,
+                    example_args=(jax.ShapeDtypeStruct((shards, 4),
+                                                       jnp.int32),))
+_, _, vs = audit_program(prog, "toy")
+unexpected = any(v.kind == "budget/unexpected-collective" for v in vs)
+
+spec = audit_spec(erdos_renyi(96, 5.0, seed=1), mesh)
+p0 = spec.programs[0]
+bad = dataclasses.replace(p0, sites=(dataclasses.replace(
+    p0.sites[0], entry_nbytes=8),))
+_, _, vs2 = audit_program(bad, "walks")
+payload = any(v.kind == "budget/payload" for v in vs2)
+print(json.dumps(dict(unexpected=unexpected, payload=payload)))
+""", devices=8)
+    assert out["unexpected"] and out["payload"]
+
+
+def test_full_audit_all_engines_clean():
+    """The PR's acceptance gate: all five engines, zero violations, exact
+    static-vs-telemetry byte agreement, W-free budgets, and the expected
+    elastic-resume classifications."""
+    out = run_forced_devices("""
+import json
+from repro.analysis.congest import audit_all_engines
+rep = audit_all_engines()
+eng = rep["engines"]
+print(json.dumps(dict(
+    ok=rep["ok"], violations=rep["violations_total"],
+    engines=sorted(eng),
+    counts=eng["counts"]["resume"]["counts"],
+    p1=eng["improved"]["resume"]["phase1"],
+    p2=eng["improved"]["resume"]["phase2"],
+    p3=eng["improved"]["resume"]["phase3"],
+    d2=eng["directed"]["resume"]["phase2"],
+    walks=eng["walks"]["resume"]["walks"],
+    ppr=eng["ppr"]["resume"]["serve"],
+    w=[eng[k]["w_independent"] for k in sorted(eng)],
+    tele=[eng[k]["telemetry"]["ok"] for k in sorted(eng)])))
+""", devices=8)
+    assert out["ok"], out
+    assert out["violations"] == 0
+    assert out["engines"] == ["counts", "directed", "improved", "ppr",
+                              "walks"]
+    assert out["counts"] == "bit-exact (replicated key)"
+    assert out["p2"] == out["p3"] == out["d2"] == "bit-exact (RNG-free)"
+    assert out["p1"].startswith("statistical")
+    assert out["walks"].startswith("statistical")
+    assert out["ppr"].startswith("statistical")
+    assert all(out["w"]) and all(out["tele"])

@@ -78,7 +78,7 @@ def test_failure_recovery_bit_exact():
                       for x in (sg.row_ptr, sg.col_idx, sg.out_deg))
         step = _make_superstep(mesh, 0.25, sg.n_loc, P_, W//P_+64, 0)
         def step_fn(s):
-            s2, active, _ = step(rp, ci, dg, s)
+            s2, active, _, _ = step(rp, ci, dg, s)
             return s2, int(active) == 0
         s = mk(); done = False
         while not done: s, done = step_fn(s)

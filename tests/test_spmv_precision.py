@@ -1,0 +1,67 @@
+"""Integer-count precision guard for the segment_spmv kernel wrapper.
+
+The Pallas kernel accumulates in float32, which represents integers
+exactly only up to 2**24. Engines declare the largest reachable count via
+`count_bound`; when the bound exceeds the f32 exact range the wrapper
+must widen to an exact integer reduction instead of silently truncating.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.routing import _seg_reduce
+from repro.kernels.segment_spmv.ops import F32_EXACT_MAX, segment_spmv
+
+
+def _exact_ref(values, dst, num_segments):
+    out = np.zeros(num_segments, dtype=np.int64)
+    for v, d in zip(np.asarray(values), np.asarray(dst)):
+        if 0 <= d < num_segments:
+            out[d] += int(v)
+    return out
+
+
+def test_f32_collision_is_real():
+    # the failure mode being guarded: 2**24 + 1 is not representable
+    assert np.float32(2 ** 24) + np.float32(1) == np.float32(2 ** 24)
+
+
+def test_kernel_path_exact_below_bound():
+    rng = np.random.default_rng(0)
+    values = jnp.asarray(rng.integers(0, 1000, size=256), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(-1, 17, size=256), dtype=jnp.int32)
+    out = segment_spmv(values, dst, 16, count_bound=1 << 20)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), _exact_ref(values, dst, 16))
+
+
+def test_widens_to_exact_past_f32_range():
+    # two entries summing to 2**24 + 1: the f32 path would return 2**24
+    values = jnp.asarray([F32_EXACT_MAX, 1, 7], dtype=jnp.int32)
+    dst = jnp.asarray([0, 0, 1], dtype=jnp.int32)
+    out = segment_spmv(values, dst, 2, count_bound=F32_EXACT_MAX + 1)
+    assert int(out[0]) == F32_EXACT_MAX + 1
+    assert int(out[1]) == 7
+
+
+def test_widened_path_keeps_drop_semantics():
+    # invalid destinations (negative / >= num_segments) must still drop
+    values = jnp.asarray([F32_EXACT_MAX, 5, 9], dtype=jnp.int32)
+    dst = jnp.asarray([0, -1, 2], dtype=jnp.int32)
+    out = segment_spmv(values, dst, 2, count_bound=F32_EXACT_MAX + 1)
+    np.testing.assert_array_equal(np.asarray(out), [F32_EXACT_MAX, 0])
+
+
+def test_seg_reduce_pallas_threads_count_bound():
+    # the routing layer's reduction entry point: with use_pallas=True and
+    # a declared bound past 2**24 the exact widening must kick in
+    values = jnp.asarray([F32_EXACT_MAX, 1], dtype=jnp.int32)
+    seg = jnp.asarray([3, 3], dtype=jnp.int32)
+    out = _seg_reduce(values, seg, 8, True, count_bound=F32_EXACT_MAX + 2)
+    assert int(out[3]) == F32_EXACT_MAX + 1
+    # and below the bound both paths agree with the exact reference
+    small = jnp.asarray([10, 20, 30], dtype=jnp.int32)
+    seg2 = jnp.asarray([1, 1, 5], dtype=jnp.int32)
+    for use_pallas in (False, True):
+        got = _seg_reduce(small, seg2, 8, use_pallas, count_bound=60)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      _exact_ref(small, seg2, 8))
